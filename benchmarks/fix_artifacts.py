@@ -1,0 +1,46 @@
+"""Recompute model_flops / roofline fields in existing dry-run artifacts
+(after a model-flops formula fix) without re-compiling anything."""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+from repro.launch.dryrun import model_flops
+from repro.launch import hlo_stats
+from repro.launch.shapes import SHAPES
+from repro.models import get_config
+
+ROOT = pathlib.Path(__file__).resolve().parents[1] / "artifacts"
+
+
+def fix_dir(d: pathlib.Path) -> int:
+    n = 0
+    for p in sorted(d.glob("*.json")):
+        r = json.loads(p.read_text())
+        if r.get("status") != "ok":
+            continue
+        cfg = get_config(r["arch"])
+        shape = SHAPES[r["shape"]]
+        mf = model_flops(cfg, shape)
+        coll = hlo_stats.CollectiveStats(
+            bytes_by_kind=r["collectives"]["bytes_by_kind"], count_by_kind={})
+        roof = hlo_stats.roofline_terms(
+            {"flops": r["hlo_cost"]["flops"],
+             "bytes accessed": r["hlo_cost"]["traffic_bytes"]},
+            coll, r["chips"], mf)
+        r["model_flops"] = mf
+        r["roofline"] = roof.as_dict()
+        p.write_text(json.dumps(r, indent=1))
+        n += 1
+    return n
+
+
+if __name__ == "__main__":
+    for name in sys.argv[1:] or ["dryrun_baseline", "dryrun_opt", "dryrun",
+                                 "perf/iter1", "perf/iter2", "perf/iter3",
+                                 "perf/iter3b", "perf/iter4", "perf/iter5",
+                                 "perf/iter6", "perf/iter7"]:
+        d = ROOT / name
+        if d.exists():
+            print(name, "->", fix_dir(d), "fixed")

@@ -1,0 +1,64 @@
+"""Pallas kernel microbenches (interpret mode on CPU — correctness-scale
+timings; the roofline story for real hardware lives in §Roofline).
+
+Reports us_per_call and the bank-derived block geometry, plus the
+reference-path timing for context.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+from repro.kernels.banked_matmul import derive_block
+
+
+def _time(fn, *args, iters=3) -> float:
+    out = jax.block_until_ready(fn(*args))   # compile
+    t0 = time.time()
+    for _ in range(iters):
+        out = jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / iters * 1e6
+
+
+def run(emit) -> None:
+    rng = np.random.default_rng(0)
+
+    # banked matmul: factor sweep mirrors the paper's partition sweep
+    a = jnp.asarray(rng.normal(size=(256, 256)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(256, 256)), jnp.float32)
+    for banks in ((1, 1, 1), (2, 2, 2), (4, 4, 4)):
+        us = _time(lambda x, y: ops.matmul(x, y, banks=banks), a, b)
+        blk = derive_block(256, 256, 256, banks)
+        emit(f"kernel_matmul_banks{banks[0]}", us, f"block={blk}")
+    emit("kernel_matmul_ref", _time(ref.matmul_ref, a, b), "jnp_oracle")
+
+    # flash attention
+    q = jnp.asarray(rng.normal(size=(1, 4, 256, 64)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 2, 256, 64)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 2, 256, 64)), jnp.float32)
+    us = _time(lambda *t: ops.attention(*t, causal=True, block_q=64,
+                                        block_k=64), q, k, v)
+    emit("kernel_flash_attention", us, "gqa4:2_s256_d64")
+    emit("kernel_attention_ref", _time(
+        lambda *t: ref.attention_ref(*t, causal=True), q, k, v), "jnp_oracle")
+
+    # decay scan (Mamba2 + RWKV modes)
+    q2 = jnp.asarray(rng.normal(size=(1, 4, 256, 32)), jnp.float32)
+    k2 = jnp.asarray(rng.normal(size=(1, 4, 256, 32)), jnp.float32)
+    v2 = jnp.asarray(rng.normal(size=(1, 4, 256, 32)), jnp.float32)
+    w2 = jnp.asarray(-np.abs(rng.normal(size=(1, 4, 256, 32))) * 0.2,
+                     jnp.float32)
+    u2 = jnp.asarray(rng.normal(size=(4, 32)), jnp.float32)
+    emit("kernel_ssm_scan_inclusive",
+         _time(lambda *t: ops.decay_scan(*t, chunk=32), q2, k2, v2, w2),
+         "mamba2_mode")
+    emit("kernel_ssm_scan_bonus",
+         _time(lambda *t: ops.decay_scan(*t, u=u2, chunk=32,
+                                         diag_mode="bonus"), q2, k2, v2, w2),
+         "rwkv6_mode")
+    emit("kernel_ssm_scan_ref", _time(
+        lambda *t: ref.ssm_scan_ref(*t), q2, k2, v2, w2), "jnp_oracle")

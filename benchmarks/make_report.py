@@ -1,0 +1,113 @@
+"""Render EXPERIMENTS.md tables from dry-run artifact directories.
+
+    PYTHONPATH=src:. python -m benchmarks.make_report [baseline_dir] [opt_dir]
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+def load(dirname):
+    out = {}
+    d = ROOT / "artifacts" / dirname
+    for p in sorted(d.glob("*.json")):
+        r = json.loads(p.read_text())
+        out[(r["arch"], r["shape"], r["mesh"])] = r
+    return out
+
+
+def fmt_bytes(b):
+    if b >= 1e12:
+        return f"{b/1e12:.2f}T"
+    if b >= 1e9:
+        return f"{b/1e9:.1f}G"
+    return f"{b/1e6:.0f}M"
+
+
+def dryrun_table(cells, mesh):
+    lines = ["| arch | shape | status | chips | HLO flops/dev | bytes/dev | "
+             "coll bytes/dev | temp/dev | compile |",
+             "|---|---|---|---:|---:|---:|---:|---:|---:|"]
+    for (a, s, m), r in sorted(cells.items()):
+        if m != mesh:
+            continue
+        if r["status"] == "skipped":
+            lines.append(f"| {a} | {s} | SKIP (full attn @512k) | | | | | | |")
+            continue
+        f = r["roofline"]
+        temp = (r.get("memory_analysis") or {}).get("temp_size_in_bytes", 0)
+        lines.append(
+            f"| {a} | {s} | ok | {r['chips']} | "
+            f"{fmt_bytes(f['flops_per_device'])} | "
+            f"{fmt_bytes(f['bytes_per_device'])} | "
+            f"{fmt_bytes(f['collective_bytes_per_device'])} | "
+            f"{fmt_bytes(temp)} | {r['compile_s']:.0f}s |")
+    return "\n".join(lines)
+
+
+def roofline_table(cells, mesh="pod16x16"):
+    lines = ["| arch | shape | compute_s | memory_s | collective_s | "
+             "dominant | useful frac | roofline frac |",
+             "|---|---|---:|---:|---:|---|---:|---:|"]
+    for (a, s, m), r in sorted(cells.items()):
+        if m != mesh or r["status"] != "ok":
+            continue
+        f = r["roofline"]
+        lines.append(
+            f"| {a} | {s} | {f['compute_s']:.3f} | {f['memory_s']:.3f} | "
+            f"{f['collective_s']:.4f} | **{f['dominant']}** | "
+            f"{f['useful_flops_frac']:.2f} | {f['roofline_frac']:.4f} |")
+    return "\n".join(lines)
+
+
+def compare_table(base, opt, cells_of_interest):
+    lines = ["| cell | metric | baseline | optimized | delta |",
+             "|---|---|---:|---:|---:|"]
+    for (a, s) in cells_of_interest:
+        b = base.get((a, s, "pod16x16"))
+        o = opt.get((a, s, "pod16x16"))
+        if not b or not o or b["status"] != "ok" or o["status"] != "ok":
+            continue
+        for m in ("compute_s", "memory_s", "collective_s"):
+            bb, oo = b["roofline"][m], o["roofline"][m]
+            lines.append(f"| {a}×{s} | {m} | {bb:.3f} | {oo:.3f} | "
+                         f"{(oo/bb-1)*100:+.1f}% |")
+        bt = (b.get("memory_analysis") or {}).get("temp_size_in_bytes", 0)
+        ot = (o.get("memory_analysis") or {}).get("temp_size_in_bytes", 0)
+        lines.append(f"| {a}×{s} | temp/dev | {fmt_bytes(bt)} | "
+                     f"{fmt_bytes(ot)} | {(ot/max(bt,1)-1)*100:+.1f}% |")
+        lines.append(f"| {a}×{s} | roofline_frac | "
+                     f"{b['roofline']['roofline_frac']:.4f} | "
+                     f"{o['roofline']['roofline_frac']:.4f} | "
+                     f"{o['roofline']['roofline_frac']/max(b['roofline']['roofline_frac'],1e-9):.2f}x |")
+    return "\n".join(lines)
+
+
+def main():
+    base = load(sys.argv[1] if len(sys.argv) > 1 else "dryrun_baseline")
+    opt_dir = sys.argv[2] if len(sys.argv) > 2 else "dryrun_opt"
+    try:
+        opt = load(opt_dir)
+    except Exception:
+        opt = {}
+    print("### Dry-run (single pod 16x16, baseline)\n")
+    print(dryrun_table(base, "pod16x16"))
+    print("\n### Dry-run (multi-pod 2x16x16, baseline)\n")
+    print(dryrun_table(base, "pod2x16x16"))
+    print("\n### Roofline (single pod, baseline)\n")
+    print(roofline_table(base))
+    if opt:
+        print("\n### Roofline (single pod, optimized)\n")
+        print(roofline_table(opt))
+        print("\n### Optimized vs baseline (hillclimbed cells)\n")
+        print(compare_table(base, opt, [("qwen2-0.5b", "train_4k"),
+                                        ("olmoe-1b-7b", "train_4k"),
+                                        ("gemma2-27b", "train_4k")]))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Roofline table from dry-run artifacts (§Roofline source of truth)."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+ROOT = pathlib.Path(__file__).resolve().parents[1] / "artifacts"
+
+
+def load_cells(dirname: str):
+    cells = []
+    d = ROOT / dirname
+    if not d.exists():
+        return cells
+    for p in sorted(d.glob("*.json")):
+        cells.append(json.loads(p.read_text()))
+    return cells
+
+
+def run(emit) -> None:
+    for label, dirname in (("base", "dryrun_baseline"),
+                           ("opt", "dryrun_opt")):
+        cells = load_cells(dirname)
+        if not cells:
+            emit(f"roofline_{label}_missing", 0.0,
+                 "run `python -m repro.launch.dryrun --all --both` first")
+            continue
+        for r in cells:
+            key = f"roofline_{label}_{r['arch']}_{r['shape']}_{r['mesh']}"
+            if r["status"] == "skipped":
+                emit(key, 0.0, "SKIP:full-attention @512k (DESIGN.md §4)")
+                continue
+            if r["status"] != "ok":
+                emit(key, 0.0, f"ERROR:{r.get('error', '?')[:80]}")
+                continue
+            f = r["roofline"]
+            emit(key, f["step_time_s"] * 1e6,
+                 f"dom={f['dominant']}"
+                 f"|compute_s={f['compute_s']:.4f}"
+                 f"|memory_s={f['memory_s']:.4f}"
+                 f"|collective_s={f['collective_s']:.4f}"
+                 f"|useful_frac={f['useful_flops_frac']:.3f}"
+                 f"|roofline_frac={f['roofline_frac']:.4f}")

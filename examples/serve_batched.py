@@ -1,0 +1,87 @@
+"""End-to-end serving driver: batched prefill + decode with a KV cache.
+
+    PYTHONPATH=src python examples/serve_batched.py --arch qwen2-0.5b \
+        --requests 4 --prompt-len 16 --gen 24
+
+Serves the reduced config of any assigned architecture on CPU: a batch of
+requests is prefilled token-by-token into the cache, then decoded greedily.
+(The production path lowers the identical serve_step at decode_32k /
+long_500k shapes in the multi-pod dry-run.)
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import decode, get_config
+from repro.models import params as MP
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=24)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    rng = np.random.default_rng(args.seed)
+    params = MP.init_params(cfg, seed=args.seed)
+    max_len = args.prompt_len + args.gen
+
+    modality = None
+    if cfg.family == "vlm":
+        modality = jnp.asarray(rng.normal(
+            size=(args.requests, cfg.num_patches, cfg.d_model)), cfg.dtype)
+    if cfg.family == "audio":
+        modality = jnp.asarray(rng.normal(
+            size=(args.requests, cfg.encoder_seq, cfg.d_model)), cfg.dtype)
+
+    cache = decode.init_cache(cfg, params, args.requests, max_len,
+                              modality=modality)
+    step = jax.jit(lambda p, c, t, pos: decode.serve_step(cfg, p, c, t, pos))
+
+    prompts = rng.integers(1, cfg.vocab_size,
+                           size=(args.requests, args.prompt_len)).astype(
+                               np.int32)
+    print(f"arch={cfg.name} (reduced) requests={args.requests} "
+          f"prompt={args.prompt_len} gen={args.gen}")
+
+    # prefill (token-by-token through the decode path)
+    t0 = time.time()
+    logits = None
+    for i in range(args.prompt_len):
+        logits, cache = step(params, cache, jnp.asarray(prompts[:, i:i + 1]),
+                             jnp.asarray(i, jnp.int32))
+    jax.block_until_ready(logits)
+    t_prefill = time.time() - t0
+
+    # greedy decode
+    outs = []
+    tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+    t0 = time.time()
+    for i in range(args.gen):
+        outs.append(np.asarray(tok))
+        logits, cache = step(params, cache, tok,
+                             jnp.asarray(args.prompt_len + i, jnp.int32))
+        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+    jax.block_until_ready(tok)
+    t_decode = time.time() - t0
+
+    gen = np.concatenate(outs, axis=1)
+    tps = args.requests * args.gen / t_decode
+    print(f"prefill: {t_prefill:.2f}s   decode: {t_decode:.2f}s "
+          f"({tps:.1f} tok/s aggregate)")
+    for r in range(min(args.requests, 2)):
+        print(f"req{r}: prompt={prompts[r, :8].tolist()}... "
+              f"generated={gen[r, :12].tolist()}...")
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

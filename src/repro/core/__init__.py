@@ -1,0 +1,12 @@
+"""Core compiler: the paper's PyTorch -> Calyx pipeline, in five stages.
+
+  frontend  : torch-like tracing        (PyTorch -> Allo)
+  tensor_ir : Linalg-like tensor graph  (Allo -> Linalg)
+  affine    : loop-nest IR + interpreter(Linalg -> Affine/SCF)
+  schedule  : par materialization + par/seq restructuring
+  banking   : cyclic memory partitioning (layout-embedded vs branchy)
+  calyx     : structural hardware IR    (CIRCT -> Calyx)
+  estimator : cycles / resources / timing
+"""
+from .pipeline import CompiledDesign, compile_graph, compile_model  # noqa: F401
+from .banking import BankingSpec, BankConflictError  # noqa: F401

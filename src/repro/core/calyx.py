@@ -1,0 +1,315 @@
+"""Calyx-like structural hardware IR and the Affine -> Calyx lowering.
+
+Mirrors Calyx's split between *structure* (cells: registers, single-ported
+memories, HardFloat units, address arithmetic) and *control* (seq / par /
+if / repeat trees over group enables).  Every static statement instantiates
+its own cells — resource sharing is future work in the paper, and we model
+the same choice, which is exactly what makes the par-unrolled designs grow.
+
+The lowering records, per group, the memory *port accesses* it performs;
+the estimator uses those to model Calyx's one-access-per-cycle memory
+constraint (conflicting parallel arms serialize — the behaviour that makes
+unbanked parallelism worthless and banked parallelism near-linear).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from . import float_lib as F
+from .affine import (AExpr, Bin, Cond, ConstF, DivAtom, If, Load, Loop,
+                     MemDecl, ModAtom, Par, Program, ReadReg, SelectC, SetReg,
+                     Stmt, Store, Un, VExpr)
+
+# ---------------------------------------------------------------------------
+# Structure
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Cell:
+    name: str
+    kind: str                 # fp_add, fp_mul, ..., int_mul, int_divmod,
+    words: int = 0            # mem_bank: capacity
+    const: int = 0            # int_mul / int_divmod constant operand
+
+
+@dataclasses.dataclass
+class PortAccess:
+    mem: str
+    bank: Optional[int]       # None = runtime-selected bank (branchy mode)
+    key: Optional[tuple]      # structural address key; None = never shareable
+    free_vars: frozenset      # loop vars the address depends on
+    is_store: bool
+
+
+@dataclasses.dataclass
+class Group:
+    name: str
+    latency: int
+    cells: List[str]
+    ports: List[PortAccess]
+
+
+# ---------------------------------------------------------------------------
+# Control
+# ---------------------------------------------------------------------------
+
+
+class CNode:
+    pass
+
+
+@dataclasses.dataclass
+class GEnable(CNode):
+    group: str
+
+
+@dataclasses.dataclass
+class CSeq(CNode):
+    children: List[CNode]
+
+
+@dataclasses.dataclass
+class CPar(CNode):
+    children: List[CNode]
+
+
+@dataclasses.dataclass
+class CRepeat(CNode):
+    extent: int
+    body: CNode
+    var: str = ""
+
+
+@dataclasses.dataclass
+class CIf(CNode):
+    cond_latency: int
+    then: CNode
+    els: CNode
+    cond_cells: List[str] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class Component:
+    name: str
+    cells: Dict[str, Cell]
+    groups: Dict[str, Group]
+    control: CNode
+    meta: Dict[str, object] = dataclasses.field(default_factory=dict)
+
+
+# ---------------------------------------------------------------------------
+# Lowering
+# ---------------------------------------------------------------------------
+
+
+class _Lower:
+    def __init__(self, prog: Program):
+        self.prog = prog
+        self.cells: Dict[str, Cell] = {}
+        self.groups: Dict[str, Group] = {}
+        self._n = 0
+
+    def fresh(self, stem: str) -> str:
+        self._n += 1
+        return f"{stem}{self._n}"
+
+    def add_cell(self, kind: str, words: int = 0, const: int = 0,
+                 name: Optional[str] = None) -> str:
+        name = name or self.fresh(kind)
+        if name not in self.cells:
+            self.cells[name] = Cell(name, kind, words, const)
+        return name
+
+    # -- address arithmetic ---------------------------------------------------
+    def addr_cells_cycles(self, e: AExpr, cells: List[str]) -> int:
+        """Instantiate const-mul / divmod units for one index expression.
+        Returns extra cycles (iterative divmod only)."""
+        cycles = 0
+        nterms = len(e.coeffs)
+        for atom, coeff in e.coeffs.items():
+            mc = F.int_mul_cost(coeff)
+            if mc.lut or mc.dsp:
+                cells.append(self.add_cell("int_mul", const=coeff))
+            if isinstance(atom, (DivAtom, ModAtom)):
+                dc = F.int_divmod_cost(atom.c)
+                if dc.cycles or dc.lut:
+                    cells.append(self.add_cell("int_divmod", const=atom.c))
+                    cycles += dc.cycles
+                cycles += self.addr_cells_cycles(atom.inner, cells)
+        if nterms > 1:
+            for _ in range(nterms - 1):
+                cells.append(self.add_cell("int_add"))
+        return cycles
+
+    # -- value expressions -----------------------------------------------------
+    def vexpr(self, e: VExpr, cells: List[str],
+              ports: List[PortAccess]) -> int:
+        """Instantiate cells; return latency (cycles) of this expr tree."""
+        if isinstance(e, ConstF):
+            return 0
+        if isinstance(e, ReadReg):
+            self.add_cell("reg32", name=f"reg_{e.name}")
+            cells.append(f"reg_{e.name}")
+            return 0
+        if isinstance(e, Load):
+            lat = F.MEM_READ_CYCLES
+            lat += self._access(e.mem, e.idxs, False, cells, ports)
+            return lat
+        if isinstance(e, Bin):
+            kind = {"add": "fp_add", "sub": "fp_sub", "mul": "fp_mul",
+                    "div": "fp_div", "max": "fp_max", "min": "fp_min"}[e.op]
+            cells.append(self.add_cell(kind))
+            a = self.vexpr(e.a, cells, ports)
+            b = self.vexpr(e.b, cells, ports)
+            return F.FLOAT_COSTS[kind].cycles + max(a, b)
+        if isinstance(e, Un):
+            kind = {"exp": "fp_exp", "relu": "fp_relu", "neg": "fp_neg"}[e.op]
+            cells.append(self.add_cell(kind))
+            return F.FLOAT_COSTS[kind].cycles + self.vexpr(e.a, cells, ports)
+        if isinstance(e, SelectC):
+            cells.append(self.add_cell("mux"))
+            cells.append(self.add_cell("cmp"))
+            cond_cyc = self.addr_cells_cycles(e.cond.expr, cells)
+            a = self.vexpr(e.a, cells, ports)
+            b = self.vexpr(e.b, cells, ports)
+            return F.IF_SELECT_CYCLES + cond_cyc + max(a, b)
+        raise TypeError(e)
+
+    def _access(self, mem: str, idxs: Sequence[AExpr], is_store: bool,
+                cells: List[str], ports: List[PortAccess]) -> int:
+        decl = self.prog.mems[mem]
+        cyc = 0
+        for ix in idxs:
+            cyc += self.addr_cells_cycles(ix, cells)
+        if decl.banks:
+            bank_e = idxs[0]
+            bank = bank_e.const_value() if bank_e.is_const() else None
+            key_exprs = idxs[1:]
+        else:
+            bank = 0
+            key_exprs = idxs
+        free = set()
+        for ke in key_exprs:
+            free |= ke.free_vars()
+        if decl.banks and not idxs[0].is_const():
+            key = None  # runtime bank: never shareable
+            free |= idxs[0].free_vars()
+        else:
+            key = tuple(ke.key() for ke in key_exprs)
+        ports.append(PortAccess(mem, bank, key, frozenset(free), is_store))
+        return cyc
+
+    # -- statements -------------------------------------------------------------
+    def stmt(self, s: Stmt) -> CNode:
+        if isinstance(s, Store):
+            cells: List[str] = []
+            ports: List[PortAccess] = []
+            lat = self.vexpr(s.value, cells, ports)
+            lat += self._access(s.mem, s.idxs, True, cells, ports)
+            lat += F.MEM_WRITE_CYCLES
+            g = self.fresh("st_")
+            self.groups[g] = Group(g, lat, cells, ports)
+            return GEnable(g)
+        if isinstance(s, SetReg):
+            cells = []
+            ports = []
+            self.add_cell("reg32", name=f"reg_{s.name}")
+            cells.append(f"reg_{s.name}")
+            lat = max(1, self.vexpr(s.value, cells, ports))
+            g = self.fresh("sr_")
+            self.groups[g] = Group(g, lat, cells, ports)
+            return GEnable(g)
+        if isinstance(s, Loop):
+            self.add_cell("idx_reg", name=f"idx_{s.var}")
+            body = self.block(s.body)
+            return CRepeat(s.extent, body, var=s.var)
+        if isinstance(s, Par):
+            return CPar([self.block(a) for a in s.arms])
+        if isinstance(s, If):
+            cells = []
+            cond_cyc = self.addr_cells_cycles(s.cond.expr, cells)
+            cells.append(self.add_cell("cmp"))
+            return CIf(cond_cyc, self.block(s.then),
+                       self.block(s.els), cond_cells=cells)
+        raise TypeError(s)
+
+    def block(self, stmts: List[Stmt]) -> CNode:
+        nodes = [self.stmt(s) for s in stmts]
+        if len(nodes) == 1:
+            return nodes[0]
+        return CSeq(nodes)
+
+    def run(self) -> Component:
+        # memory banks as cells
+        for name, decl in self.prog.mems.items():
+            if decl.banks:
+                nbanks = decl.shape[0]
+                words = 1
+                for s in decl.shape[1:]:
+                    words *= s
+                for b in range(nbanks):
+                    self.add_cell("mem_bank", words=words,
+                                  name=f"mem_{name}_b{b}")
+            else:
+                self.add_cell("mem_bank", words=decl.size, name=f"mem_{name}")
+        control = self.block(self.prog.body)
+        comp = Component(self.prog.name, self.cells, self.groups, control,
+                         meta=dict(self.prog.meta))
+        return comp
+
+
+def lower_program(prog: Program) -> Component:
+    return _Lower(prog).run()
+
+
+# ---------------------------------------------------------------------------
+# Text emission (futil-like) for debuggability
+# ---------------------------------------------------------------------------
+
+
+def emit_text(comp: Component) -> str:
+    out: List[str] = [f"component {comp.name}() -> () {{", "  cells {"]
+    for c in comp.cells.values():
+        extra = f", words={c.words}" if c.kind == "mem_bank" else (
+            f", const={c.const}" if c.const else "")
+        out.append(f"    {c.name} = {c.kind}(){extra};")
+    out.append("  }")
+    out.append("  groups {")
+    for g in comp.groups.values():
+        ports = " ".join(
+            f"{'W' if p.is_store else 'R'}:{p.mem}[b={p.bank}]" for p in g.ports)
+        out.append(f"    group {g.name}<{g.latency}> {{ {ports} }}")
+    out.append("  }")
+    out.append("  control {")
+
+    def emit(node: CNode, ind: int):
+        pad = "  " * ind
+        if isinstance(node, GEnable):
+            out.append(f"{pad}{node.group};")
+        elif isinstance(node, CSeq):
+            out.append(f"{pad}seq {{")
+            for ch in node.children:
+                emit(ch, ind + 1)
+            out.append(f"{pad}}}")
+        elif isinstance(node, CPar):
+            out.append(f"{pad}par {{")
+            for ch in node.children:
+                emit(ch, ind + 1)
+            out.append(f"{pad}}}")
+        elif isinstance(node, CRepeat):
+            out.append(f"{pad}repeat {node.extent} /* {node.var} */ {{")
+            emit(node.body, ind + 1)
+            out.append(f"{pad}}}")
+        elif isinstance(node, CIf):
+            out.append(f"{pad}if <cond:{node.cond_latency}> {{")
+            emit(node.then, ind + 1)
+            out.append(f"{pad}}} else {{")
+            emit(node.els, ind + 1)
+            out.append(f"{pad}}}")
+
+    emit(comp.control, 2)
+    out.append("  }")
+    out.append("}")
+    return "\n".join(out)

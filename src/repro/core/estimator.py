@@ -1,0 +1,236 @@
+"""Cycle-count, resource, and timing estimation over the Calyx-like IR.
+
+Latency model:
+  * ``seq``     — sum of children.
+  * ``repeat``  — setup + extent * (body + per-iteration overhead).
+  * ``if``      — cond + max(arms) + select overhead (both arms exist in
+                  hardware; only one executes).
+  * ``par``     — memory-port conflict model: arms that touch the same
+                  (memory, bank) with non-shareable addresses must serialize
+                  (Calyx memories accept one access per cycle).  We build a
+                  conflict graph over the arms; each connected component runs
+                  sequentially, components run concurrently:
+                  ``latency = max over components(sum of arm latencies)``.
+                  Identical-address *loads* broadcast from one port and do
+                  not conflict.  This is what makes unbanked `par` worthless
+                  and layout-banked `par` near-linear — the paper's story.
+
+Resource model: sum of cell costs (float_lib) + BRAM/LUTRAM per bank +
+FSM fabric per control state + a constant top-level overhead.
+
+Timing: first-order achievable period grows with FSM state count and bank
+select-chain depth; wall-clock latency = cycles * period.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Set, Tuple
+
+from . import float_lib as F
+from .calyx import (CIf, CNode, CPar, CRepeat, CSeq, Component, GEnable,
+                    PortAccess)
+
+
+# ---------------------------------------------------------------------------
+# Port collection (for the par conflict model)
+# ---------------------------------------------------------------------------
+
+
+def _collect_ports(comp: Component, node: CNode,
+                   bound: Set[str]) -> List[PortAccess]:
+    """All port accesses under ``node``; addresses depending on loop vars
+    bound *inside* this subtree are marked unshareable (key -> None)."""
+    out: List[PortAccess] = []
+    if isinstance(node, GEnable):
+        for p in comp.groups[node.group].ports:
+            if p.key is not None and p.free_vars & bound:
+                out.append(dataclasses.replace(p, key=None))
+            else:
+                out.append(p)
+    elif isinstance(node, CSeq) or isinstance(node, CPar):
+        for ch in node.children:
+            out += _collect_ports(comp, ch, bound)
+    elif isinstance(node, CRepeat):
+        out += _collect_ports(comp, node.body, bound | {node.var})
+    elif isinstance(node, CIf):
+        out += _collect_ports(comp, node.then, bound)
+        out += _collect_ports(comp, node.els, bound)
+    return out
+
+
+def _arms_conflict(pa: List[PortAccess], pb: List[PortAccess]) -> bool:
+    for a in pa:
+        for b in pb:
+            if a.mem != b.mem:
+                continue
+            if a.bank is not None and b.bank is not None and a.bank != b.bank:
+                continue  # provably different physical banks
+            if (not a.is_store and not b.is_store
+                    and a.key is not None and a.key == b.key):
+                continue  # identical-address loads: broadcast one read
+            return True
+    return False
+
+
+# ---------------------------------------------------------------------------
+# Cycles
+# ---------------------------------------------------------------------------
+
+
+def cycles(comp: Component, node: Optional[CNode] = None) -> int:
+    node = comp.control if node is None else node
+    if isinstance(node, GEnable):
+        return comp.groups[node.group].latency
+    if isinstance(node, CSeq):
+        return sum(cycles(comp, ch) for ch in node.children)
+    if isinstance(node, CRepeat):
+        body = cycles(comp, node.body)
+        return F.LOOP_SETUP_CYCLES + node.extent * (body + F.LOOP_ITER_OVERHEAD)
+    if isinstance(node, CIf):
+        t = cycles(comp, node.then)
+        e = cycles(comp, node.els)
+        return node.cond_latency + F.IF_SELECT_CYCLES + max(t, e)
+    if isinstance(node, CPar):
+        arms = node.children
+        if not arms:
+            return 0
+        lats = [cycles(comp, a) for a in arms]
+        ports = [_collect_ports(comp, a, set()) for a in arms]
+        n = len(arms)
+        # union-find over conflict graph
+        parent = list(range(n))
+
+        def find(x: int) -> int:
+            while parent[x] != x:
+                parent[x] = parent[parent[x]]
+                x = parent[x]
+            return x
+
+        for i in range(n):
+            for j in range(i + 1, n):
+                if _arms_conflict(ports[i], ports[j]):
+                    parent[find(i)] = find(j)
+        comp_lat: Dict[int, int] = {}
+        for i in range(n):
+            r = find(i)
+            comp_lat[r] = comp_lat.get(r, 0) + lats[i]
+        # join handshake: a done-signal reduction tree over the arms
+        join = F.PAR_JOIN_CYCLES + max(0, math.ceil(math.log2(max(n, 1))))
+        return max(comp_lat.values()) + join
+    raise TypeError(node)
+
+
+# ---------------------------------------------------------------------------
+# Resources
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Resources:
+    lut: int = 0
+    ff: int = 0
+    bram: int = 0
+    dsp: int = 0
+
+    def add(self, c: F.OpCost, n: int = 1):
+        self.lut += c.lut * n
+        self.ff += c.ff * n
+        self.dsp += c.dsp * n
+
+    def as_dict(self) -> Dict[str, int]:
+        return {"LUT": self.lut, "FF": self.ff, "BRAM": self.bram,
+                "DSP": self.dsp}
+
+
+def fsm_states(node: CNode) -> int:
+    if isinstance(node, GEnable):
+        return 1
+    if isinstance(node, CSeq):
+        return sum(fsm_states(ch) for ch in node.children)
+    if isinstance(node, CPar):
+        return 1 + sum(fsm_states(ch) for ch in node.children)
+    if isinstance(node, CRepeat):
+        return 1 + fsm_states(node.body)
+    if isinstance(node, CIf):
+        return 1 + fsm_states(node.then) + fsm_states(node.els)
+    raise TypeError(node)
+
+
+def max_select_depth(comp: Component, node: Optional[CNode] = None) -> int:
+    """Depth of the deepest bank-selection chain (branchy mode blow-up)."""
+    node = comp.control if node is None else node
+    if isinstance(node, GEnable):
+        return 0
+    if isinstance(node, (CSeq, CPar)):
+        return max((max_select_depth(comp, ch) for ch in node.children),
+                   default=0)
+    if isinstance(node, CRepeat):
+        return max_select_depth(comp, node.body)
+    if isinstance(node, CIf):
+        inner = max(max_select_depth(comp, node.then),
+                    max_select_depth(comp, node.els))
+        return 1 + inner
+    raise TypeError(node)
+
+
+def resources(comp: Component) -> Resources:
+    res = Resources()
+    for cell in comp.cells.values():
+        if cell.kind == "mem_bank":
+            res.add(F.memory_cost(cell.words))
+            res.bram += F.memory_brams(cell.words)
+        elif cell.kind in F.FLOAT_COSTS:
+            res.add(F.FLOAT_COSTS[cell.kind])
+        elif cell.kind == "int_mul":
+            res.add(F.int_mul_cost(cell.const))
+        elif cell.kind == "int_divmod":
+            res.add(F.int_divmod_cost(cell.const))
+        elif cell.kind in F.INT_COSTS:
+            res.add(F.INT_COSTS[cell.kind])
+        else:
+            raise KeyError(cell.kind)
+    states = fsm_states(comp.control)
+    res.lut += F.FSM_LUT_PER_STATE * states
+    res.lut += F.GROUP_FABRIC_LUT * len(comp.groups)
+    res.ff += F.FSM_FF_PER_STATE_BIT * max(1, math.ceil(math.log2(states + 1)))
+    res.ff += states
+    res.lut += F.TOP_OVERHEAD["lut"]
+    res.ff += F.TOP_OVERHEAD["ff"]
+    res.dsp += F.TOP_OVERHEAD["dsp"]
+    res.bram += F.TOP_OVERHEAD["bram"]
+    return res
+
+
+# ---------------------------------------------------------------------------
+# Report
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Estimate:
+    cycles: int
+    resources: Dict[str, int]
+    fsm_states: int
+    period_ns: float
+    fmax_mhz: float
+    wall_us: float
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+def estimate(comp: Component) -> Estimate:
+    cyc = cycles(comp)
+    res = resources(comp)
+    states = fsm_states(comp.control)
+    depth = max_select_depth(comp)
+    period = F.achievable_period_ns(states, depth)
+    return Estimate(
+        cycles=cyc,
+        resources=res.as_dict(),
+        fsm_states=states,
+        period_ns=round(period, 3),
+        fmax_mhz=round(1000.0 / period, 1),
+        wall_us=round(cyc * period / 1000.0, 3),
+    )

@@ -1,0 +1,89 @@
+"""Pure-jnp reference executor for tensor graphs — the correctness oracle.
+
+Every downstream stage (affine lowering, banking, scheduling) must agree
+with this executor bit-for-bit (up to float tolerance).  Also usable as a
+fast functional form of a traced model for integration with the training
+substrate.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import tensor_ir as T
+
+
+def _op_fn(op: T.TensorOp, env: Dict[str, jnp.ndarray],
+           graph: T.Graph) -> jnp.ndarray:
+    ins = [env[i] for i in op.inputs]
+    k = op.kind
+    if k == "matmul":
+        return ins[0] @ ins[1]
+    if k == "add":
+        return ins[0] + ins[1]
+    if k == "mul":
+        return ins[0] * ins[1]
+    if k == "scale":
+        return ins[0] * op.attrs["value"]
+    if k == "relu":
+        return jnp.maximum(ins[0], 0.0)
+    if k == "conv2d":
+        x, w = ins  # (Cin,H,W), (Cout,Cin,kh,kw)
+        out = jax.lax.conv_general_dilated(
+            x[None], w, window_strides=(1, 1), padding="VALID",
+            dimension_numbers=("NCHW", "OIHW", "NCHW"))
+        return out[0]
+    if k == "maxpool2d":
+        ph, pw = op.attrs["ph"], op.attrs["pw"]
+        x = ins[0]
+        c, h, w = x.shape
+        x = x[:, : (h // ph) * ph, : (w // pw) * pw]
+        x = x.reshape(c, h // ph, ph, w // pw, pw)
+        return x.max(axis=(2, 4))
+    if k == "flatten":
+        return ins[0].reshape(-1)
+    if k == "reshape":
+        return ins[0].reshape(op.shape)
+    if k == "transpose":
+        return ins[0].T
+    if k == "softmax":
+        return jax.nn.softmax(ins[0], axis=-1)
+    if k == "causal_mask":
+        s = ins[0].shape[0]
+        mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+        return jnp.where(mask, ins[0], -1e30)
+    raise NotImplementedError(k)
+
+
+def execute_graph(graph: T.Graph, inputs: Dict[str, np.ndarray]
+                  ) -> List[np.ndarray]:
+    env: Dict[str, jnp.ndarray] = {}
+    for op in graph.ops:
+        if op.kind == "input":
+            env[op.name] = jnp.asarray(inputs[op.name], dtype=jnp.float32)
+        elif op.kind == "param":
+            env[op.name] = jnp.asarray(graph.params[op.name],
+                                       dtype=jnp.float32)
+        else:
+            env[op.name] = _op_fn(op, env, graph)
+    return [np.asarray(env[o]) for o in graph.outputs]
+
+
+def as_jax_fn(graph: T.Graph):
+    """Return a jit-able fn(inputs_dict) -> list of outputs."""
+
+    def fn(inputs):
+        env: Dict[str, jnp.ndarray] = {}
+        for op in graph.ops:
+            if op.kind == "input":
+                env[op.name] = jnp.asarray(inputs[op.name], jnp.float32)
+            elif op.kind == "param":
+                env[op.name] = jnp.asarray(graph.params[op.name], jnp.float32)
+            else:
+                env[op.name] = _op_fn(op, env, graph)
+        return [env[o] for o in graph.outputs]
+
+    return fn

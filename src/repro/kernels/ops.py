@@ -1,0 +1,55 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True unless a real TPU backend is present —
+frameworks flip to compiled kernels transparently on hardware, while CPU
+CI exercises the identical kernel bodies through the Pallas interpreter.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import banked_conv2d as _bc
+from . import banked_matmul as _bm
+from . import flash_attention as _fa
+from . import ssm_scan as _ss
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.devices()[0].platform == "tpu"
+    except Exception:  # pragma: no cover
+        return False
+
+
+@functools.partial(jax.jit, static_argnames=("banks", "block", "out_dtype"))
+def matmul(a: jax.Array, b: jax.Array,
+           banks: Tuple[int, int, int] = (1, 1, 1),
+           block: Optional[Tuple[int, int, int]] = None,
+           out_dtype=None) -> jax.Array:
+    return _bm.banked_matmul(a, b, banks=banks, block=block,
+                             out_dtype=out_dtype, interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "scale", "block_q", "block_k"))
+def attention(q, k, v, causal: bool = True, scale: Optional[float] = None,
+              block_q: int = 128, block_k: int = 128) -> jax.Array:
+    return _fa.flash_attention(q, k, v, causal=causal, scale=scale,
+                               block_q=block_q, block_k=block_k,
+                               interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "diag_mode"))
+def decay_scan(q, k, v, w, u=None, chunk: int = 32,
+               diag_mode: str = "inclusive") -> jax.Array:
+    return _ss.ssm_scan(q, k, v, w, u=u, chunk=chunk, diag_mode=diag_mode,
+                        interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("banks",))
+def conv2d(x, w, banks: Tuple[int, int] = (1, 1)) -> jax.Array:
+    return _bc.banked_conv2d(x, w, banks=banks, interpret=not _on_tpu())

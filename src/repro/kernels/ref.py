@@ -1,0 +1,82 @@
+"""Pure-jnp oracles for every Pallas kernel.  The kernels must match these
+bit-for-bit up to dtype tolerance on all swept shapes."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(a: jax.Array, b: jax.Array, out_dtype=None) -> jax.Array:
+    out_dtype = out_dtype or a.dtype
+    return jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32),
+                   preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                  causal: bool = True,
+                  scale: Optional[float] = None) -> jax.Array:
+    """q: (B,Hq,S,D); k/v: (B,Hkv,S,D); GQA by head repetition."""
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    kr = jnp.repeat(k, group, axis=1)
+    vr = jnp.repeat(v, group, axis=1)
+    s_mat = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                       kr.astype(jnp.float32)) * scale
+    if causal:
+        sk = k.shape[2]
+        mask = jnp.tril(jnp.ones((s, sk), bool), k=sk - s)
+        s_mat = jnp.where(mask, s_mat, -1e30)
+    p = jax.nn.softmax(s_mat, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vr.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def ssm_scan_ref(q: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+                 u: Optional[jax.Array] = None,
+                 diag_mode: str = "inclusive") -> jax.Array:
+    """Step-by-step recurrence (jax.lax.scan over time) — the ground truth.
+
+        h_t = exp(w_t) (.) h_{t-1} + k_t (x) v_t
+        inclusive: o_t = q_t . h_t
+        bonus:     o_t = q_t . h_{t-1} + (q_t . (u (.) k_t)) v_t
+    """
+    b, h, s, dk = q.shape
+    dv = v.shape[-1]
+    if u is None:
+        u = jnp.zeros((h, dk), q.dtype)
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    wf = w.astype(jnp.float32)
+    uf = jnp.broadcast_to(u.astype(jnp.float32)[None], (b, h, dk))
+
+    def step(hstate, inp):
+        qt, kt, vt, wt = inp                      # (b,h,dk),(b,h,dk),(b,h,dv)
+        decayed = jnp.exp(wt)[..., None] * hstate  # (b,h,dk,dv)
+        h_new = decayed + kt[..., None] * vt[..., None, :]
+        if diag_mode == "inclusive":
+            o = jnp.einsum("bhk,bhkv->bhv", qt, h_new)
+        else:
+            o = jnp.einsum("bhk,bhkv->bhv", qt, hstate)
+            bonus = jnp.einsum("bhk,bhk->bh", qt, uf * kt)
+            o = o + bonus[..., None] * vt
+        return h_new, o
+
+    h0 = jnp.zeros((b, h, dk, dv), jnp.float32)
+    inputs = (jnp.moveaxis(qf, 2, 0), jnp.moveaxis(kf, 2, 0),
+              jnp.moveaxis(vf, 2, 0), jnp.moveaxis(wf, 2, 0))
+    _, outs = jax.lax.scan(step, h0, inputs)
+    return jnp.moveaxis(outs, 0, 2).astype(q.dtype)
+
+
+def conv2d_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x: (Cin,H,W); w: (Cout,Cin,kh,kw) -> valid unit-stride conv."""
+    out = jax.lax.conv_general_dilated(
+        x[None].astype(jnp.float32), w.astype(jnp.float32),
+        window_strides=(1, 1), padding="VALID",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"))
+    return out[0].astype(x.dtype)

@@ -1,0 +1,121 @@
+"""Chunked decay-scan kernel (SSD / linear attention) for Mamba2 and RWKV6.
+
+Recurrence per head, with per-channel log-decay ``w_t <= 0`` over the key
+dimension (RWKV6 "Finch" data-dependent decay; Mamba2 broadcasts a scalar):
+
+    h_t = exp(w_t) (.) h_{t-1}  +  k_t (x) v_t            h in R^{dk x dv}
+    o_t = q_t . h_{t-1 or t}                               (see ``diag_mode``)
+
+``diag_mode``:
+  * ``"inclusive"`` (Mamba2/SSD): o_t reads h_t (current token included via
+    the decay path).
+  * ``"bonus"`` (RWKV6): o_t reads h_{t-1} plus a bonus term
+    ``(q_t . (u (.) k_t)) v_t`` for the current token.
+
+TPU chunking: grid (B*H, n_chunks), sequential chunk axis carrying the f32
+state in VMEM scratch.  Within a chunk the recurrence is materialized in
+parallel form: cumulative decays fold the paper's bank-index trick one more
+time — positions inside the chunk address the state with compile-time
+offsets, never a serial python loop.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scan_kernel(q_ref, k_ref, v_ref, w_ref, u_ref, o_ref, h_ref, *,
+                 chunk: int, diag_mode: str):
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    q = q_ref[0].astype(jnp.float32)      # (C, dk)
+    k = k_ref[0].astype(jnp.float32)      # (C, dk)
+    v = v_ref[0].astype(jnp.float32)      # (C, dv)
+    w = w_ref[0].astype(jnp.float32)      # (C, dk), log-decays (<= 0)
+
+    W = jnp.cumsum(w, axis=0)             # (C, dk) inclusive cumulative decay
+    h0 = h_ref[...]                       # (dk, dv) state before this chunk
+
+    if diag_mode == "inclusive":
+        # o_t = q_t . h_t ; h_t includes token t
+        qW = q * jnp.exp(W)               # decay from chunk start to t
+        o_inter = jnp.dot(qW, h0, preferred_element_type=jnp.float32)
+        # intra: sum_{s<=t} exp(W_t - W_s) (q_t.k_s) v_s
+        # (exponent masked BEFORE exp: upper triangle overflows otherwise)
+        mask = jnp.tril(jnp.ones((chunk, chunk), jnp.bool_))
+        diff = jnp.where(mask[:, :, None], W[:, None, :] - W[None, :, :],
+                         -1e30)
+        rel = jnp.exp(diff)                               # (C, C, dk)
+        scores = jnp.einsum("td,tsd,sd->ts", q, rel, k)
+        o = o_inter + jnp.dot(scores, v, preferred_element_type=jnp.float32)
+    else:  # bonus (RWKV6): o_t reads h_{t-1}, diag via u
+        Wprev = W - w                     # decay chunk-start .. t-1
+        qW = q * jnp.exp(Wprev)
+        o_inter = jnp.dot(qW, h0, preferred_element_type=jnp.float32)
+        mask = jnp.tril(jnp.ones((chunk, chunk), jnp.bool_), k=-1)
+        diff = jnp.where(mask[:, :, None], Wprev[:, None, :] - W[None, :, :],
+                         -1e30)
+        rel = jnp.exp(diff)                               # s <= t-1
+        scores = jnp.einsum("td,tsd,sd->ts", q, rel, k)
+        o = o_inter + jnp.dot(scores, v, preferred_element_type=jnp.float32)
+        u = u_ref[...].astype(jnp.float32)                # (1, dk)
+        bonus = jnp.sum(q * u * k, axis=1, keepdims=True) # (C, 1)
+        o = o + bonus * v
+
+    o_ref[0] = o.astype(o_ref.dtype)
+
+    # state update: h' = exp(W_last) h0 + sum_s exp(W_last - W_s) k_s v_s
+    w_last = W[-1]                                         # (dk,)
+    k_dec = k * jnp.exp(w_last[None, :] - W)               # (C, dk)
+    h_ref[...] = (jnp.exp(w_last)[:, None] * h0
+                  + jnp.dot(k_dec.T, v, preferred_element_type=jnp.float32))
+
+
+def ssm_scan(q: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+             u: Optional[jax.Array] = None, chunk: int = 32,
+             diag_mode: str = "inclusive", interpret: bool = True
+             ) -> jax.Array:
+    """q/k/w: (B, H, S, dk); v: (B, H, S, dv); u: (H, dk) for RWKV bonus.
+
+    Returns o: (B, H, S, dv).  S must be divisible by ``chunk``.
+    """
+    b, h, s, dk = q.shape
+    dv = v.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    assert diag_mode in ("inclusive", "bonus")
+    nchunks = s // chunk
+    if u is None:
+        u = jnp.zeros((h, dk), q.dtype)
+
+    qf = q.reshape(b * h, s, dk)
+    kf = k.reshape(b * h, s, dk)
+    vf = v.reshape(b * h, s, dv)
+    wf = w.reshape(b * h, s, dk)
+    uf = jnp.tile(u, (b, 1)).reshape(b * h, dk)
+
+    kernel = functools.partial(_scan_kernel, chunk=chunk, diag_mode=diag_mode)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h, nchunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk, dk), lambda bh, c: (bh, c, 0)),
+            pl.BlockSpec((1, chunk, dk), lambda bh, c: (bh, c, 0)),
+            pl.BlockSpec((1, chunk, dv), lambda bh, c: (bh, c, 0)),
+            pl.BlockSpec((1, chunk, dk), lambda bh, c: (bh, c, 0)),
+            pl.BlockSpec((1, dk), lambda bh, c: (bh, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, dv), lambda bh, c: (bh, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, dv), q.dtype),
+        scratch_shapes=[pltpu.VMEM((dk, dv), jnp.float32)],
+        interpret=interpret,
+    )(qf, kf, vf, wf, uf)
+    return out.reshape(b, h, s, dv)

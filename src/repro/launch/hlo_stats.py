@@ -1,0 +1,162 @@
+"""HLO text analysis: collective bytes, op census, roofline terms.
+
+``cost_analysis`` has no collective figures, so we parse the (post-SPMD,
+per-device) HLO text and sum result-shape bytes of every collective op.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Dict, Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  %all-gather.5 = bf16[16,2048]{1,0} all-gather(...)
+_OP_RE = re.compile(
+    r"=\s*(?:\()?\s*([a-z0-9]+)\[([\d,]*)\][^=]*?\s("
+    + "|".join(_COLLECTIVES) + r")(?:-start|-done)?\(")
+_TUPLE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, int]
+    count_by_kind: Dict[str, int]
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.count_by_kind.values())
+
+    def as_dict(self):
+        return {"bytes_by_kind": self.bytes_by_kind,
+                "count_by_kind": self.count_by_kind,
+                "total_bytes": self.total_bytes,
+                "total_count": self.total_count}
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    """Sum result bytes per collective kind.  Handles tuple results
+    ((f32[..], f32[..]) all-gather(...)) and async -start/-done pairs
+    (only -start lines are counted)."""
+    bytes_by: Dict[str, int] = {}
+    count_by: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if "-done(" in stripped:
+            continue  # counted at -start
+        kind = None
+        for c in _COLLECTIVES:
+            if f" {c}(" in stripped or f" {c}-start(" in stripped:
+                kind = c
+                break
+        if kind is None or "=" not in stripped:
+            continue
+        rhs = stripped.split("=", 1)[1]
+        type_part = rhs.split(kind)[0]
+        total = 0
+        for m in _TUPLE_RE.finditer(type_part):
+            total += _shape_bytes(m.group(1), m.group(2))
+        if total == 0:
+            continue
+        bytes_by[kind] = bytes_by.get(kind, 0) + total
+        count_by[kind] = count_by.get(kind, 0) + 1
+    return CollectiveStats(bytes_by, count_by)
+
+
+def count_op(hlo_text: str, opname: str) -> int:
+    return len(re.findall(rf"\s{re.escape(opname)}\(", hlo_text))
+
+
+# ---------------------------------------------------------------------------
+# Roofline terms (TPU v5e constants per assignment)
+# ---------------------------------------------------------------------------
+
+PEAK_FLOPS_BF16 = 197e12        # per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW = 50e9                   # bytes/s per link
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops: float                # per-device HLO flops
+    bytes_accessed: float       # per-device HLO bytes
+    collective_bytes: float     # per-device collective bytes
+    model_flops: float = 0.0    # 6*N*D (useful work, global)
+    chips: int = 1
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_frac(self) -> float:
+        """MODEL_FLOPS / (HLO_FLOPs * chips) — remat/redundancy waste."""
+        total = self.flops * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def roofline_frac(self) -> float:
+        """Fraction of the chips' peak that USEFUL work achieves at the
+        modeled step time (an MFU bound)."""
+        t = self.step_time_s
+        if not t or not self.model_flops:
+            return 0.0
+        return self.model_flops / (t * self.chips * PEAK_FLOPS_BF16)
+
+    def as_dict(self):
+        return {
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "flops_per_device": self.flops,
+            "bytes_per_device": self.bytes_accessed,
+            "collective_bytes_per_device": self.collective_bytes,
+            "model_flops": self.model_flops,
+            "useful_flops_frac": self.useful_flops_frac,
+            "roofline_frac": self.roofline_frac,
+            "step_time_s": self.step_time_s,
+            "chips": self.chips,
+        }
+
+
+def roofline_terms(cost: Dict, coll: CollectiveStats, chips: int,
+                   model_flops: float, ici_links: int = 4) -> Roofline:
+    """cost: compiled.cost_analysis() (per-device, post-SPMD)."""
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    cbytes = float(coll.total_bytes)
+    return Roofline(
+        compute_s=flops / PEAK_FLOPS_BF16,
+        memory_s=byts / HBM_BW,
+        collective_s=cbytes / (ICI_BW * ici_links),
+        flops=flops, bytes_accessed=byts, collective_bytes=cbytes,
+        model_flops=model_flops, chips=chips,
+    )

@@ -1,0 +1,302 @@
+"""Decode path: cache construction + single-token serve step, all families.
+
+``decode_*`` shapes lower THIS path (one new token against a static
+seq_len-sized cache), not the training step.  Caches are stacked over scan
+groups so the decode HLO also contains a single group body.
+
+Cache layouts:
+  dense/moe : {'k','v'} (G, [layers-per-group,] B, Hkv, L, dh), pos scalar
+  vlm       : self caches + precomputed vision cross K/V
+  hybrid    : mamba states (O(1)) + shared-attn KV cache
+  ssm       : wkv state + shift states (O(1))
+  audio     : decoder self cache + precomputed encoder cross K/V
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as A
+from . import mamba as M
+from . import moe as MOE
+from . import rwkv as R
+from .common import embed, lm_logits, norm, rope_freqs, sinusoid_pos
+from .config import ModelConfig
+from .mlp import mlp_block
+from .params import param_specs
+from .transformer import encode_audio
+
+
+def _kv_shape(cfg: ModelConfig, batch: int, max_len: int):
+    return (batch, cfg.num_kv_heads, max_len, cfg.head_dim)
+
+
+def _kv_entry(cfg: ModelConfig, batch: int, max_len: int):
+    """Self-attention cache entry; int8 mode adds per-token scales."""
+    kv = _kv_shape(cfg, batch, max_len)
+    entry = {"k": kv, "v": kv}
+    if cfg.kv_cache_dtype == "int8":
+        entry["k_scale"] = (batch, cfg.num_kv_heads, max_len, 1)
+        entry["v_scale"] = (batch, cfg.num_kv_heads, max_len, 1)
+    return entry
+
+
+def _zeros(shape, dtype):
+    return jnp.zeros(shape, dtype)
+
+
+def _stack_shapes(n: int, tree):
+    return jax.tree.map(lambda s: (n,) + s if isinstance(s, tuple) else s,
+                        tree, is_leaf=lambda x: isinstance(x, tuple))
+
+
+# ---------------------------------------------------------------------------
+# Cache spec (shapes only — used by the dry-run) and init
+# ---------------------------------------------------------------------------
+
+
+def cache_shapes(cfg: ModelConfig, batch: int, max_len: int) -> Any:
+    g = cfg.num_groups
+    kv = _kv_shape(cfg, batch, max_len)
+    fam = cfg.family
+    if fam == "dense" and cfg.local_global:
+        local_len = min(max_len, cfg.sliding_window)
+        per = {"local": _kv_entry(cfg, batch, local_len),
+               "global": _kv_entry(cfg, batch, max_len)}
+    elif fam in ("dense", "moe"):
+        per = {"lyr": _kv_entry(cfg, batch, max_len)}
+    elif fam == "vlm":
+        n_self = cfg.cross_attn_every - 1
+        cross_kv = (batch, cfg.num_kv_heads, cfg.num_patches, cfg.head_dim)
+        per = {"self": _stack_shapes(n_self, _kv_entry(cfg, batch, max_len)),
+               "cross": {"k": cross_kv, "v": cross_kv}}
+    elif fam == "hybrid":
+        n_mamba = cfg.hybrid_attn_every - 1
+        per = {"mamba": _stack_shapes(n_mamba, M.mamba_cache_shape(cfg, batch)),
+               "attn": _kv_entry(cfg, batch, max_len)}
+    elif fam == "ssm":
+        per = {"lyr": R.rwkv_cache_shape(cfg, batch)}
+    elif fam == "audio":
+        enc_kv = (batch, cfg.num_kv_heads, cfg.encoder_seq, cfg.head_dim)
+        per = {"lyr": {"self": _kv_entry(cfg, batch, max_len),
+                       "cross": {"k": enc_kv, "v": enc_kv}}}
+    else:
+        raise ValueError(fam)
+    return _stack_shapes(g, per)
+
+
+def _cache_leaf_dtype(cfg: ModelConfig, path_key: str, shape, parent):
+    """int8 only for self-attn k/v whose sibling scale entry exists
+    (cross caches are read raw by _cross_decode and stay full precision)."""
+    if cfg.kv_cache_dtype == "int8":
+        if path_key in ("k", "v") and f"{path_key}_scale" in parent:
+            return jnp.dtype(jnp.int8)
+        if path_key.endswith("_scale"):
+            return jnp.dtype(jnp.float32)
+    return jnp.dtype(cfg.dtype)
+
+
+def _map_cache(cfg: ModelConfig, tree, fn):
+    """Map over cache leaves with their dict-key names + parent dict."""
+    def walk(t, key="", parent=None):
+        if isinstance(t, tuple):
+            return fn(key, t, parent or {})
+        return {k: walk(v, k, t) for k, v in t.items()}
+    return walk(tree)
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int):
+    return _map_cache(
+        cfg, cache_shapes(cfg, batch, max_len),
+        lambda key, s, par: jax.ShapeDtypeStruct(
+            s, _cache_leaf_dtype(cfg, key, s, par)))
+
+
+def init_cache(cfg: ModelConfig, params, batch: int, max_len: int,
+               modality: Optional[jax.Array] = None):
+    """Materialize an empty cache; precompute cross K/V where applicable."""
+    dt = jnp.dtype(cfg.dtype)
+    cache = _map_cache(
+        cfg, cache_shapes(cfg, batch, max_len),
+        lambda key, s, par: _zeros(s, _cache_leaf_dtype(cfg, key, s, par)))
+    if cfg.family == "vlm" and modality is not None:
+        def fill(gp, c):
+            _, kx, vx = A.qkv_proj(cfg, gp["cross"]["attn"], modality,
+                                   kv_x=modality)
+            c = dict(c)
+            c["cross"] = {"k": kx.astype(dt), "v": vx.astype(dt)}
+            return c
+        groups = [fill(jax.tree.map(lambda a: a[i], params["blocks"]),
+                       jax.tree.map(lambda a: a[i], cache))
+                  for i in range(cfg.num_groups)]
+        cache = jax.tree.map(lambda *xs: jnp.stack(xs), *groups)
+    if cfg.family == "audio" and modality is not None:
+        enc = encode_audio(cfg, params, modality)
+        def fill(gp, c):
+            _, kx, vx = A.qkv_proj(cfg, gp["lyr"]["cross"], enc, kv_x=enc)
+            c = dict(c)
+            c["lyr"] = dict(c["lyr"])
+            c["lyr"]["cross"] = {"k": kx.astype(dt), "v": vx.astype(dt)}
+            return c
+        groups = [fill(jax.tree.map(lambda a: a[i], params["blocks"]),
+                       jax.tree.map(lambda a: a[i], cache))
+                  for i in range(cfg.num_groups)]
+        cache = jax.tree.map(lambda *xs: jnp.stack(xs), *groups)
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention against a precomputed cache (no causal mask)
+# ---------------------------------------------------------------------------
+
+
+def _cross_decode(cfg: ModelConfig, p, x1, kc, vc):
+    b = x1.shape[0]
+    h, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    g = h // hkv
+    q = jnp.einsum("bsd,de->bse", x1, p["wq"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+    q = q.reshape(b, 1, h, dh).transpose(0, 2, 1, 3)
+    qg = q.reshape(b, hkv, g, 1, dh)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg.astype(jnp.float32),
+                   kc.astype(jnp.float32)) / (dh ** 0.5)
+    pgs = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", pgs, vc.astype(jnp.float32))
+    out = out.reshape(b, h, 1, dh).transpose(0, 2, 1, 3).reshape(b, 1, -1)
+    return jnp.einsum("bse,ed->bsd", out.astype(x1.dtype), p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# Per-family group decode steps
+# ---------------------------------------------------------------------------
+
+
+def _dense_decode(cfg, p, x1, c, pos, window=0, ring=False):
+    h = norm(cfg, p["ln1"], x1)
+    a, c_new = A.attn_decode(cfg, p["attn"], h, c, pos, window=window,
+                             attn_softcap=cfg.attn_softcap, ring=ring)
+    if "ln1_post" in p:
+        a = norm(cfg, p["ln1_post"], a)
+    x1 = x1 + a
+    h = norm(cfg, p["ln2"], x1)
+    m = mlp_block(cfg, p["mlp"], h)
+    if "ln2_post" in p:
+        m = norm(cfg, p["ln2_post"], m)
+    return x1 + m, c_new
+
+
+def _group_decode(cfg: ModelConfig, params, pos):
+    fam = cfg.family
+
+    if fam == "dense" and cfg.local_global:
+        def step(x1, gp, gc):
+            x1, cl = _dense_decode(cfg, gp["local"], x1, gc["local"], pos,
+                                   window=cfg.sliding_window, ring=True)
+            x1, cg = _dense_decode(cfg, gp["global"], x1, gc["global"], pos)
+            return x1, {"local": cl, "global": cg}
+    elif fam == "dense":
+        def step(x1, gp, gc):
+            x1, c = _dense_decode(cfg, gp["lyr"], x1, gc["lyr"], pos)
+            return x1, {"lyr": c}
+    elif fam == "moe":
+        def step(x1, gp, gc):
+            p = gp["lyr"]
+            h = norm(cfg, p["ln1"], x1)
+            a, c = A.attn_decode(cfg, p["attn"], h, gc["lyr"], pos)
+            x1 = x1 + a
+            h = norm(cfg, p["ln2"], x1)
+            y, _ = MOE.moe_block(cfg, p["moe"], h)
+            return x1 + y, {"lyr": c}
+    elif fam == "vlm":
+        def step(x1, gp, gc):
+            def body(xx, lpc):
+                lp, lc = lpc
+                return _dense_decode(cfg, lp, xx, lc, pos)
+            x1_, self_new = jax.lax.scan(body, x1, (gp["self"], gc["self"]))
+            p = gp["cross"]
+            h = norm(cfg, p["ln1"], x1_)
+            a = _cross_decode(cfg, p["attn"], h, gc["cross"]["k"],
+                              gc["cross"]["v"])
+            x1_ = x1_ + a * jnp.tanh(p["gate_attn"]).astype(a.dtype)
+            h = norm(cfg, p["ln2"], x1_)
+            m = mlp_block(cfg, p["mlp"], h)
+            x1_ = x1_ + m * jnp.tanh(p["gate_mlp"]).astype(m.dtype)
+            return x1_, {"self": self_new, "cross": gc["cross"]}
+    elif fam == "hybrid":
+        shared = params["shared_block"]
+
+        def step(x1, gp, gc):
+            def body(xx, lpc):
+                lp, lc = lpc
+                delta, lc_new = M.mamba_decode_step(cfg, lp, xx, lc)
+                return xx + delta, lc_new
+            x1_, mamba_new = jax.lax.scan(body, x1,
+                                          (gp["mamba"], gc["mamba"]))
+            x1_, attn_new = _dense_decode(cfg, shared, x1_, gc["attn"], pos)
+            return x1_, {"mamba": mamba_new, "attn": attn_new}
+    elif fam == "ssm":
+        def step(x1, gp, gc):
+            x1, c = R.rwkv_decode_step(cfg, gp["lyr"], x1, gc["lyr"])
+            return x1, {"lyr": c}
+    elif fam == "audio":
+        def step(x1, gp, gc):
+            p = gp["lyr"]
+            h = norm(cfg, p["ln1"], x1)
+            a, c_self = A.attn_decode(cfg, p["attn"], h, gc["lyr"]["self"],
+                                      pos)
+            x1 = x1 + a
+            h = norm(cfg, p["ln2"], x1)
+            x1 = x1 + _cross_decode(cfg, p["cross"], h,
+                                    gc["lyr"]["cross"]["k"],
+                                    gc["lyr"]["cross"]["v"])
+            h = norm(cfg, p["ln3"], x1)
+            x1 = x1 + mlp_block(cfg, p["mlp"], h)
+            return x1, {"lyr": {"self": c_self, "cross": gc["lyr"]["cross"]}}
+    else:
+        raise ValueError(fam)
+    return step
+
+
+def serve_step(cfg: ModelConfig, params, cache, tokens: jax.Array, pos
+               ) -> Tuple[jax.Array, Any]:
+    """tokens: (B, 1) int32; pos: scalar int32 (next write position).
+
+    Returns (logits (B, 1, V), updated cache).
+    """
+    x1 = embed(cfg, params, tokens)
+    if cfg.family == "audio":
+        table = sinusoid_pos(cache_max_len(cfg, cache), cfg.d_model)
+        pe = jax.lax.dynamic_slice_in_dim(table, pos, 1)
+        x1 = x1 + pe[None].astype(x1.dtype)
+    step = _group_decode(cfg, params, pos)
+
+    def body(carry, gpc):
+        gp, gc = gpc
+        xx = carry
+        xx, gc_new = step(xx, gp, gc)
+        return xx, gc_new
+
+    if cfg.scan_layers:
+        x1, new_cache = jax.lax.scan(body, x1, (params["blocks"], cache))
+    else:
+        new_groups = []
+        for i in range(cfg.num_groups):
+            gp = jax.tree.map(lambda a: a[i], params["blocks"])
+            gc = jax.tree.map(lambda a: a[i], cache)
+            x1, gc_new = step(x1, gp, gc)
+            new_groups.append(gc_new)
+        new_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *new_groups)
+    x1 = norm(cfg, params["final_norm"], x1)
+    return lm_logits(cfg, params, x1), new_cache
+
+
+def cache_max_len(cfg: ModelConfig, cache) -> int:
+    """Decoder self-attention cache length (the position-table size)."""
+    if cfg.family == "audio":
+        return cache["lyr"]["self"]["k"].shape[-2]
+    leaves = jax.tree.leaves(cache)
+    return max((l.shape[-2] for l in leaves if l.ndim >= 4), default=1)

@@ -1,0 +1,114 @@
+"""Mamba2 (SSD) block — zamba2's backbone layer.
+
+Structure per layer: norm -> in_proj -> causal depthwise conv over
+(x, B, C) -> SSD recurrence (scalar per-head decay via chunked decay scan)
+-> gate -> out_proj.  State size 64, head dim 64, d_inner = 2 * d_model.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import constrain, norm
+from .config import ModelConfig
+from .ssm_ops import chunked_decay_scan, decay_scan_step
+
+
+def _dims(cfg: ModelConfig):
+    d_inner = 2 * cfg.d_model
+    nh = d_inner // cfg.ssm_head_dim
+    return d_inner, nh, cfg.ssm_state
+
+
+def _split_proj(cfg: ModelConfig, proj: jax.Array):
+    d_inner, nh, st = _dims(cfg)
+    z, xs, bmat, cmat, dt = jnp.split(
+        proj, [d_inner, 2 * d_inner, 2 * d_inner + st, 2 * d_inner + 2 * st],
+        axis=-1)
+    return z, xs, bmat, cmat, dt
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over (B, S, CH), width K (shift-and-add form —
+    lowers to cheap adds; K is small)."""
+    k = w.shape[0]
+    out = jnp.zeros_like(x)
+    for i in range(k):
+        shift = k - 1 - i
+        xi = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, :x.shape[1]]
+        out = out + xi * w[i]
+    return jax.nn.silu(out + b)
+
+
+def mamba_block(cfg: ModelConfig, p, x: jax.Array) -> jax.Array:
+    """x: (B, S, D) -> (B, S, D)."""
+    b, s, d = x.shape
+    d_inner, nh, st = _dims(cfg)
+    hx = norm(cfg, p["ln"], x)
+    proj = jnp.einsum("bsd,de->bse", hx, p["in_proj"])
+    z, xs, bmat, cmat, dt = _split_proj(cfg, proj)
+    conv_in = jnp.concatenate([xs, bmat, cmat], axis=-1)
+    conv_out = _causal_conv(conv_in, p["conv_w"], p["conv_b"])
+    xs, bmat, cmat = jnp.split(conv_out, [d_inner, d_inner + st], axis=-1)
+
+    dt_full = jax.nn.softplus(dt.astype(jnp.float32)
+                              + p["dt_bias"].astype(jnp.float32))  # (B,S,nh)
+    a = jnp.exp(p["A_log"].astype(jnp.float32))                    # (nh,)
+    w_log = (-dt_full * a).transpose(0, 2, 1)                      # (B,nh,S)
+
+    xh = xs.reshape(b, s, nh, cfg.ssm_head_dim).transpose(0, 2, 1, 3)
+    q = jnp.broadcast_to(cmat[:, None], (b, nh, s, st))
+    k = jnp.broadcast_to(bmat[:, None], (b, nh, s, st))
+    k = k * dt_full.transpose(0, 2, 1)[..., None]                  # dt * B
+    y = chunked_decay_scan(q, k, xh.astype(q.dtype), w_log,
+                           chunk=64, diag_mode="inclusive")        # (B,nh,S,hd)
+    y = y + p["D"].astype(y.dtype)[None, :, None, None] * xh.astype(y.dtype)
+    y = y.transpose(0, 2, 1, 3).reshape(b, s, d_inner)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y.astype(x.dtype), p["out_proj"])
+    return constrain(out, "batch", "seq", "embed")
+
+
+# ---------------------------------------------------------------------------
+# Decode (O(1) state per layer)
+# ---------------------------------------------------------------------------
+
+
+def mamba_cache_shape(cfg: ModelConfig, batch: int):
+    d_inner, nh, st = _dims(cfg)
+    conv_ch = d_inner + 2 * st
+    return {
+        "h": (batch, nh, st, cfg.ssm_head_dim),
+        "conv": (batch, cfg.ssm_conv_width - 1, conv_ch),
+    }
+
+
+def mamba_decode_step(cfg: ModelConfig, p, x1: jax.Array, cache: Dict
+                      ) -> Tuple[jax.Array, Dict]:
+    """x1: (B, 1, D); cache: {'h','conv'} per mamba_cache_shape."""
+    b = x1.shape[0]
+    d_inner, nh, st = _dims(cfg)
+    hx = norm(cfg, p["ln"], x1)
+    proj = jnp.einsum("bsd,de->bse", hx, p["in_proj"])
+    z, xs, bmat, cmat, dt = _split_proj(cfg, proj)
+    conv_in = jnp.concatenate([xs, bmat, cmat], axis=-1)   # (B,1,CH)
+    window = jnp.concatenate([cache["conv"], conv_in], axis=1)  # (B,K,CH)
+    conv_out = jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"]
+    conv_out = jax.nn.silu(conv_out)[:, None]              # (B,1,CH)
+    xs, bmat, cmat = jnp.split(conv_out, [d_inner, d_inner + st], axis=-1)
+
+    dt_full = jax.nn.softplus(dt[:, 0].astype(jnp.float32)
+                              + p["dt_bias"].astype(jnp.float32))  # (B,nh)
+    a = jnp.exp(p["A_log"].astype(jnp.float32))
+    w1 = -dt_full * a                                      # (B,nh) log decay
+
+    xh = xs[:, 0].reshape(b, nh, cfg.ssm_head_dim)
+    q1 = jnp.broadcast_to(cmat[:, 0, None], (b, nh, st))
+    k1 = jnp.broadcast_to(bmat[:, 0, None], (b, nh, st)) * dt_full[..., None]
+    o, h_new = decay_scan_step(cache["h"], q1, k1, xh, w1)
+    o = o + p["D"].astype(o.dtype)[None, :, None] * xh.astype(o.dtype)
+    y = o.reshape(b, 1, d_inner) * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y.astype(x1.dtype), p["out_proj"])
+    return out, {"h": h_new, "conv": window[:, 1:]}

@@ -1,0 +1,143 @@
+"""RWKV6 "Finch" block: data-dependent-decay time mix + channel mix.
+
+Time mix: data-dependent token-shift interpolation (ddlerp with a shared
+low-rank adapter), per-channel decay ``w_t = -exp(w0 + lora(x))``, WKV
+recurrence with bonus ``u`` (strictly-past state + current-token bonus —
+``diag_mode='bonus'`` of the decay scan), per-head group norm, output gate.
+
+Channel mix: token-shift lerp, squared-ReLU FFN with a receptance gate.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import constrain, layer_norm
+from .config import ModelConfig
+from .ssm_ops import chunked_decay_scan, decay_scan_step
+
+
+def _group_norm(x: jax.Array, w: jax.Array, b: jax.Array, heads: int,
+                eps: float = 1e-5) -> jax.Array:
+    """Per-head group norm over (B, S, H*dh)."""
+    bsz, s, d = x.shape
+    xh = x.reshape(bsz, s, heads, d // heads).astype(jnp.float32)
+    mu = xh.mean(-1, keepdims=True)
+    var = ((xh - mu) ** 2).mean(-1, keepdims=True)
+    xh = (xh - mu) * jax.lax.rsqrt(var + eps)
+    out = xh.reshape(bsz, s, d) * w.astype(jnp.float32) + b.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def _shift(x: jax.Array, prev: jax.Array = None) -> jax.Array:
+    """Token shift: x_{t-1} (zeros/``prev`` for t=0)."""
+    pad = jnp.zeros_like(x[:, :1]) if prev is None else prev
+    return jnp.concatenate([pad, x[:, :-1]], axis=1)
+
+
+def _ddlerp(p, x: jax.Array, xx: jax.Array):
+    """Finch data-dependent lerp producing the 5 mixed inputs (r,k,v,w,g)."""
+    delta = xx - x
+    # shared low-rank adapter: (B,S,D) -> 5 x (B,S,D)
+    mixed = x + delta * 0.5
+    low = jnp.tanh(jnp.einsum("bsd,dr->bsr", mixed, p["mix_A"]))
+    low = low.reshape(*low.shape[:-1], 5, -1)                 # (B,S,5,r)
+    adj = jnp.einsum("bsir,ird->bsid", low, p["mix_B"])       # (B,S,5,D)
+    mu = p["mu"][None, None]                                  # (1,1,5,D)
+    out = x[:, :, None] + delta[:, :, None] * (mu + adj)
+    return [out[:, :, i] for i in range(5)]
+
+
+def _time_mix_core(cfg: ModelConfig, p, xr, xk, xv, xw, xg):
+    h, dh = cfg.num_heads, cfg.head_dim
+    b, s, _ = xr.shape
+    r = jnp.einsum("bsd,de->bse", xr, p["wr"]).reshape(b, s, h, dh)
+    k = jnp.einsum("bsd,de->bse", xk, p["wk"]).reshape(b, s, h, dh)
+    v = jnp.einsum("bsd,de->bse", xv, p["wv"]).reshape(b, s, h, dh)
+    g = jnp.einsum("bsd,de->bse", xg, p["wg"])
+    w_log = -jnp.exp(p["w0"].astype(jnp.float32)
+                     + jnp.einsum("bsd,dr->bsr", xw.astype(jnp.float32),
+                                  p["wlora_A"].astype(jnp.float32))
+                     @ p["wlora_B"].astype(jnp.float32))      # (B,S,D) <= 0
+    w_log = w_log.reshape(b, s, h, dh)
+    return r, k, v, g, w_log
+
+
+def time_mix(cfg: ModelConfig, p, x: jax.Array) -> jax.Array:
+    b, s, d = x.shape
+    h, dh = cfg.num_heads, cfg.head_dim
+    xx = _shift(x)
+    xr, xk, xv, xw, xg = _ddlerp(p, x, xx)
+    r, k, v, g, w_log = _time_mix_core(cfg, p, xr, xk, xv, xw, xg)
+    # (B,S,H,dh) -> (B,H,S,dh)
+    tr = lambda t: t.transpose(0, 2, 1, 3)
+    o = chunked_decay_scan(tr(r), tr(k), tr(v), tr(w_log), u=p["u"],
+                           chunk=64, diag_mode="bonus")       # (B,H,S,dh)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, d)
+    o = _group_norm(o, p["gn_w"], p["gn_b"], heads=h)
+    o = o * jax.nn.silu(g)
+    out = jnp.einsum("bse,ed->bsd", o.astype(x.dtype), p["wo"])
+    return constrain(out, "batch", "seq", "embed")
+
+
+def channel_mix(cfg: ModelConfig, p, x: jax.Array) -> jax.Array:
+    xx = _shift(x)
+    xk = x + (xx - x) * p["mu_k"]
+    xr = x + (xx - x) * p["mu_r"]
+    k = jnp.einsum("bsd,df->bsf", xk, p["wk"])
+    k = jnp.square(jnp.maximum(k, 0.0))
+    kv = jnp.einsum("bsf,fd->bsd", k, p["wv"])
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["wr"]))
+    return r * kv
+
+
+def rwkv_block(cfg: ModelConfig, p, x: jax.Array) -> jax.Array:
+    x = x + time_mix(cfg, p["tm"],
+                     layer_norm(x, p["ln1"]["w"], p["ln1"]["b"]))
+    x = x + channel_mix(cfg, p["cm"],
+                        layer_norm(x, p["ln2"]["w"], p["ln2"]["b"]))
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Decode (O(1): wkv state + two shift states)
+# ---------------------------------------------------------------------------
+
+
+def rwkv_cache_shape(cfg: ModelConfig, batch: int):
+    return {
+        "wkv": (batch, cfg.num_heads, cfg.head_dim, cfg.head_dim),
+        "shift_tm": (batch, 1, cfg.d_model),
+        "shift_cm": (batch, 1, cfg.d_model),
+    }
+
+
+def rwkv_decode_step(cfg: ModelConfig, p, x1: jax.Array, cache: Dict
+                     ) -> Tuple[jax.Array, Dict]:
+    b, _, d = x1.shape
+    h, dh = cfg.num_heads, cfg.head_dim
+    # time mix
+    xn = layer_norm(x1, p["ln1"]["w"], p["ln1"]["b"])
+    xx = cache["shift_tm"]
+    xr, xk, xv, xw, xg = _ddlerp(p["tm"], xn, xx)
+    r, k, v, g, w_log = _time_mix_core(cfg, p["tm"], xr, xk, xv, xw, xg)
+    sq = lambda t: t[:, 0].reshape(b, h, dh)
+    o, wkv_new = decay_scan_step(cache["wkv"], sq(r), sq(k), sq(v),
+                                 sq(w_log), u=p["tm"]["u"], diag_mode="bonus")
+    o = o.reshape(b, 1, d)
+    o = _group_norm(o, p["tm"]["gn_w"], p["tm"]["gn_b"], heads=h)
+    o = o * jax.nn.silu(g)
+    x1 = x1 + jnp.einsum("bse,ed->bsd", o.astype(x1.dtype), p["tm"]["wo"])
+    # channel mix
+    xn2 = layer_norm(x1, p["ln2"]["w"], p["ln2"]["b"])
+    xxc = cache["shift_cm"]
+    xk2 = xn2 + (xxc - xn2) * p["cm"]["mu_k"]
+    xr2 = xn2 + (xxc - xn2) * p["cm"]["mu_r"]
+    kk = jnp.square(jnp.maximum(
+        jnp.einsum("bsd,df->bsf", xk2, p["cm"]["wk"]), 0.0))
+    kv = jnp.einsum("bsf,fd->bsd", kk, p["cm"]["wv"])
+    rr = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr2, p["cm"]["wr"]))
+    x1 = x1 + rr * kv
+    return x1, {"wkv": wkv_new, "shift_tm": xn, "shift_cm": xn2}

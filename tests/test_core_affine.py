@@ -1,0 +1,112 @@
+"""Affine-expression algebra + interpreter-vs-oracle for every op kind."""
+import numpy as np
+import pytest
+
+from repro.core import affine, frontend, jax_backend, pipeline
+from repro.core import tensor_ir as T
+from repro.core.affine import AExpr
+
+
+class TestAExprAlgebra:
+    def test_linear_ops(self):
+        i, j = AExpr.var("i"), AExpr.var("j")
+        e = i * 3 + j * 2 + 5
+        assert e.evaluate({"i": 2, "j": 7}) == 3 * 2 + 2 * 7 + 5
+
+    def test_mod_folds_when_coeffs_divisible(self):
+        ii = AExpr.var("ii")
+        e = (ii * 4 + 3).mod(4)
+        assert e.is_const() and e.const_value() == 3
+
+    def test_div_folds_when_coeffs_divisible(self):
+        ii = AExpr.var("ii")
+        e = (ii * 4 + 3).floordiv(4)
+        assert e.key() == AExpr.var("ii").key()
+
+    def test_mod_survives_otherwise(self):
+        i = AExpr.var("i")
+        e = (i * 3).mod(2)
+        assert not e.is_const() and e.has_divmod()
+        assert e.evaluate({"i": 3}) == (3 * 3) % 2
+
+    def test_substitute_refolds(self):
+        i, a = AExpr.var("i"), AExpr.var("ii")
+        e = i.mod(2)            # symbolic
+        folded = e.substitute({"i": a * 2 + 1})
+        assert folded.is_const() and folded.const_value() == 1
+
+    def test_structural_equality_and_cancellation(self):
+        i = AExpr.var("i")
+        e1 = i.mod(3) * 4 + 1
+        e2 = i.mod(3) * 4
+        diff = e1 - e2
+        assert diff.is_const() and diff.const_value() == 1
+
+    def test_mod_one_is_zero(self):
+        assert AExpr.var("x").mod(1).const_value() == 0
+
+    def test_divmod_identity_holds(self):
+        # x == (x // c) * c + (x % c) for sampled values
+        x = AExpr.var("x")
+        e = x.floordiv(5) * 5 + x.mod(5)
+        for v in range(0, 23):
+            assert e.evaluate({"x": v}) == v
+
+
+def _roundtrip(module, shape, rtol=1e-4, atol=1e-5, factor=1, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=shape).astype(np.float32)
+    d = pipeline.compile_model(module, [shape], factor=factor)
+    hw = d.run({"arg0": x})
+    jx = d.run_oracle({"arg0": x})
+    for h, j in zip(hw, jx):
+        np.testing.assert_allclose(h, j, rtol=rtol, atol=atol)
+    return d
+
+
+class TestOpLowerings:
+    def test_matmul(self):
+        class M(frontend.Module):
+            def __init__(self):
+                self.lin = frontend.Linear(6, 5, bias=False)
+
+            def forward(self, x):
+                return self.lin(x)
+
+        _roundtrip(M(), (3, 6))
+
+    def test_linear_bias_relu(self):
+        m = frontend.Sequential(frontend.Linear(6, 4), frontend.ReLU())
+        _roundtrip(m, (2, 6))
+
+    def test_conv_pool_flatten(self):
+        m = frontend.Sequential(frontend.Conv2d(2, 3, 3, 3),
+                                frontend.MaxPool2d(2, 2),
+                                frontend.Flatten())
+        _roundtrip(m, (2, 7, 7))
+
+    def test_softmax(self):
+        m = frontend.Softmax()
+        _roundtrip(m, (3, 5), rtol=1e-3)
+
+    def test_causal_mask_and_transpose(self):
+        class M(frontend.Module):
+            def forward(self, x):
+                g = x.graph
+                t = x.t()
+                s = x @ t
+                return frontend.Value(g, T.causal_mask(g, s.name))
+
+        _roundtrip(M(), (4, 3))
+
+    def test_mha_matches_oracle(self):
+        _roundtrip(frontend.paper_mha(), (4, 42), rtol=1e-3, atol=1e-4)
+
+
+class TestUsefulFlops:
+    def test_ffnn_flops(self):
+        g = frontend.trace(frontend.paper_ffnn(), [(1, 64)])
+        # 2*(1*64*48) + 2*(1*48*4) matmul + elementwise
+        assert g.flops() >= 2 * 64 * 48 + 2 * 48 * 4
+        prog = affine.lower_graph(g)
+        assert prog.meta["useful_flops"] == g.flops()

@@ -1,0 +1,131 @@
+"""Banking pass: layout correctness, branchy equivalence, hazard analysis,
+and the paper's c^d blow-up metrics."""
+import numpy as np
+import pytest
+
+from repro.core import affine, banking, frontend, pipeline, schedule
+from repro.core.affine import AExpr, pack_banked, unpack_banked
+from repro.core.banking import (BankConflictError, BankingSpec,
+                                count_branch_arms, count_divmod_hardware,
+                                provably_disjoint)
+
+
+class TestPackUnpack:
+    @pytest.mark.parametrize("shape,factors", [
+        ((8,), (2,)), ((8, 6), (2, 3)), ((5,), (2,)), ((7, 5), (4, 2)),
+        ((4, 4, 4), (2, 2, 2)),
+    ])
+    def test_roundtrip(self, shape, factors):
+        rng = np.random.default_rng(0)
+        arr = rng.normal(size=shape).astype(np.float32)
+        packed = unpack_banked(pack_banked(arr, factors), shape, factors)
+        np.testing.assert_array_equal(packed, arr)
+
+    def test_cyclic_layout(self):
+        arr = np.arange(8.0)
+        b = pack_banked(arr, (2,))
+        np.testing.assert_array_equal(b[0], [0, 2, 4, 6])
+        np.testing.assert_array_equal(b[1], [1, 3, 5, 7])
+
+
+class TestDisjointness:
+    def test_const_difference_is_disjoint(self):
+        i = AExpr.var("i")
+        assert provably_disjoint([i * 2], [i * 2 + 1])
+
+    def test_same_expr_not_disjoint(self):
+        i = AExpr.var("i")
+        assert not provably_disjoint([i], [i])
+
+    def test_symbolic_not_disjoint(self):
+        assert not provably_disjoint([AExpr.var("i")], [AExpr.var("j")])
+
+
+class TestLayoutBanking:
+    def test_ffnn_factor2_and_4_match_oracle(self):
+        m = frontend.paper_ffnn()
+        x = np.random.default_rng(0).normal(size=(1, 64)).astype(np.float32)
+        ref = None
+        for f in (1, 2, 4):
+            d = pipeline.compile_model(m, [(1, 64)], factor=f)
+            out = d.run({"arg0": x})[0]
+            if ref is None:
+                ref = d.run_oracle({"arg0": x})[0]
+            np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-5)
+
+    def test_layout_mode_has_no_divmod_or_branches(self):
+        d = pipeline.compile_model(frontend.paper_ffnn(), [(1, 64)], factor=4)
+        assert count_divmod_hardware(d.program) == 0
+        assert count_branch_arms(d.program) == 0
+        assert d.hazards == []
+
+    def test_banked_memory_shapes(self):
+        d = pipeline.compile_model(frontend.paper_ffnn(), [(1, 64)], factor=2)
+        # weight (64,48) -> factors (2,2) -> (4, 32, 24)
+        w = [m for m in d.program.mems.values()
+             if m.role == "param" and m.banks == (2, 2)
+             and m.shape == (4, 32, 24)]
+        assert w, "expected the 64x48 weight banked into 4 banks of 32x24"
+
+
+class TestBranchyBanking:
+    def test_branchy_matches_oracle(self):
+        m = frontend.paper_ffnn()
+        x = np.random.default_rng(1).normal(size=(1, 64)).astype(np.float32)
+        d = pipeline.compile_model(m, [(1, 64)], factor=2, mode="branchy",
+                                   check_hazards=False)
+        np.testing.assert_allclose(d.run({"arg0": x})[0],
+                                   d.run_oracle({"arg0": x})[0],
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_branchy_blowup_scales_with_banks(self):
+        """The paper's c^d growth: branch hardware grows ~4x from f2 to f4."""
+        m = frontend.paper_ffnn()
+        b2 = pipeline.compile_model(m, [(1, 64)], factor=2, mode="branchy",
+                                    check_hazards=False)
+        b4 = pipeline.compile_model(m, [(1, 64)], factor=4, mode="branchy",
+                                    check_hazards=False)
+        n2, n4 = count_branch_arms(b2.program), count_branch_arms(b4.program)
+        assert n2 > 0 and n4 > 3 * n2   # c^d with d=2: 4x per factor doubling
+
+    def test_branchy_hazards_not_provable(self):
+        d = pipeline.compile_model(frontend.paper_ffnn(), [(1, 64)], factor=2,
+                                   mode="branchy", check_hazards=False)
+        assert len(d.hazards) > 0   # the static analysis cannot prove safety
+
+    def test_branchy_slower_and_larger_than_layout(self):
+        m = frontend.paper_ffnn()
+        dl = pipeline.compile_model(m, [(1, 64)], factor=2)
+        db = pipeline.compile_model(m, [(1, 64)], factor=2, mode="branchy",
+                                    check_hazards=False)
+        assert db.estimate.cycles > 2 * dl.estimate.cycles
+        assert db.estimate.resources["LUT"] > dl.estimate.resources["LUT"]
+
+
+class TestHazardDetection:
+    def test_write_write_conflict_detected(self):
+        """Hand-built Par with two arms writing the same address."""
+        i = AExpr.var("i")
+        st = affine.Store("m", [i], affine.ConstF(1.0))
+        st2 = affine.Store("m", [i], affine.ConstF(2.0))
+        prog = affine.Program(
+            "p", {"m": affine.MemDecl("m", (4,), "output")},
+            [affine.Loop("i", 4, [affine.Par([[st], [st2]])])])
+        with pytest.raises(BankConflictError):
+            banking.check_par_hazards(prog)
+
+    def test_disjoint_writes_pass(self):
+        i = AExpr.var("i")
+        st = affine.Store("m", [i * 2], affine.ConstF(1.0))
+        st2 = affine.Store("m", [i * 2 + 1], affine.ConstF(2.0))
+        prog = affine.Program(
+            "p", {"m": affine.MemDecl("m", (8,), "output")},
+            [affine.Loop("i", 4, [affine.Par([[st], [st2]])])])
+        assert banking.check_par_hazards(prog) == []
+
+    def test_reg_cross_arm_conflict(self):
+        s1 = affine.SetReg("r", affine.ConstF(1.0))
+        s2 = affine.SetReg("r", affine.ConstF(2.0))
+        prog = affine.Program("p", {}, [affine.Par([[s1], [s2]])])
+        with pytest.raises(BankConflictError):
+            banking.check_par_hazards(prog)

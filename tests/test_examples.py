@@ -1,0 +1,47 @@
+"""Every example script must run end-to-end (subprocess smoke)."""
+import os
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+ENV = {**os.environ, "PYTHONPATH": "src"}
+
+
+def _run(args, timeout=420):
+    r = subprocess.run([sys.executable] + args, capture_output=True,
+                       text=True, env=ENV, cwd=str(ROOT), timeout=timeout)
+    assert r.returncode == 0, f"{args}\n{r.stdout[-1500:]}\n{r.stderr[-1500:]}"
+    return r.stdout
+
+
+class TestExamples:
+    def test_quickstart(self):
+        out = _run(["examples/quickstart.py"])
+        assert "correct=True" in out and "factor=4" in out
+
+    def test_banking_sweep(self):
+        out = _run(["examples/banking_sweep.py"])
+        assert "paper 2.40x" in out and "branchy" in out
+
+    def test_compile_to_calyx(self):
+        out = _run(["examples/compile_to_calyx.py", "--model", "ffnn",
+                    "--factor", "2"])
+        assert "cycles=" in out and ".futil" in out
+
+    def test_train_lm_with_failure(self):
+        out = _run(["examples/train_lm.py", "--steps", "14",
+                    "--inject-failure", "6", "--batch", "4", "--seq", "32"])
+        assert "restarts=1" in out and out.strip().endswith("OK")
+
+    def test_serve_batched(self):
+        out = _run(["examples/serve_batched.py", "--requests", "2",
+                    "--gen", "6", "--prompt-len", "8"])
+        assert out.strip().endswith("OK")
+
+    def test_serve_launcher(self):
+        out = _run(["-m", "repro.launch.serve", "--slots", "2",
+                    "--requests", "3", "--gen", "4", "--prompt-len", "4"])
+        assert "3/3 requests" in out

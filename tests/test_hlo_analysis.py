@@ -1,0 +1,114 @@
+"""Validate the trip-count-aware HLO analyzer against known-cost programs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch import hlo_analysis as H
+
+
+def _compile_text(fn, *specs):
+    return jax.jit(fn).lower(*specs).compile().as_text()
+
+
+S = jax.ShapeDtypeStruct
+
+
+class TestFlops:
+    def test_single_dot(self):
+        text = _compile_text(lambda a, b: a @ b,
+                             S((64, 32), jnp.float32),
+                             S((32, 16), jnp.float32))
+        cost = H.analyze(text)
+        assert cost.flops == pytest.approx(2 * 64 * 32 * 16, rel=0.01)
+
+    def test_scan_multiplies_by_trip_count(self):
+        def scanned(x, w):
+            def body(c, _):
+                return c @ w, None
+            out, _ = jax.lax.scan(body, x, None, length=8)
+            return out
+
+        def unrolled(x, w):
+            for _ in range(8):
+                x = x @ w
+            return x
+
+        specs = (S((128, 128), jnp.float32),) * 2
+        f_scan = H.analyze(_compile_text(scanned, *specs)).flops
+        f_unroll = H.analyze(_compile_text(unrolled, *specs)).flops
+        expect = 2 * 128 ** 3 * 8
+        assert f_scan == pytest.approx(expect, rel=0.05)
+        assert f_unroll == pytest.approx(expect, rel=0.05)
+
+    def test_nested_scan(self):
+        def fn(x, w):
+            def outer(c, _):
+                def inner(ci, _):
+                    return ci @ w, None
+                ci, _ = jax.lax.scan(inner, c, None, length=4)
+                return ci, None
+            out, _ = jax.lax.scan(outer, x, None, length=3)
+            return out
+
+        specs = (S((64, 64), jnp.float32),) * 2
+        cost = H.analyze(_compile_text(fn, *specs))
+        assert cost.flops == pytest.approx(2 * 64 ** 3 * 12, rel=0.05)
+
+    def test_batched_dot(self):
+        def fn(a, b):
+            return jnp.einsum("bij,bjk->bik", a, b)
+        text = _compile_text(fn, S((4, 8, 16), jnp.float32),
+                             S((4, 16, 8), jnp.float32))
+        cost = H.analyze(text)
+        assert cost.flops == pytest.approx(2 * 4 * 8 * 16 * 8, rel=0.01)
+
+
+class TestTraffic:
+    def test_elementwise_traffic_reasonable(self):
+        def fn(a, b):
+            return a + b * 2.0
+        text = _compile_text(fn, S((1024, 1024), jnp.float32),
+                             S((1024, 1024), jnp.float32))
+        cost = H.analyze(text)
+        mb = 1024 * 1024 * 4
+        # in + in + out = 3 buffers (fusion collapses the temporary)
+        assert 2 * mb <= cost.traffic_bytes <= 5 * mb
+
+    def test_scan_traffic_scales(self):
+        def scanned(x):
+            def body(c, _):
+                return c * 2.0 + 1.0, None
+            out, _ = jax.lax.scan(body, x, None, length=16)
+            return out
+        t1 = H.analyze(_compile_text(scanned, S((512, 512), jnp.float32)))
+
+        def scanned4(x):
+            def body(c, _):
+                return c * 2.0 + 1.0, None
+            out, _ = jax.lax.scan(body, x, None, length=64)
+            return out
+        t4 = H.analyze(_compile_text(scanned4, S((512, 512), jnp.float32)))
+        assert t4.traffic_bytes > 3 * t1.traffic_bytes
+
+
+class TestCollectives:
+    @pytest.fixture(scope="class")
+    def mesh8(self):
+        if len(jax.devices()) < 8:
+            pytest.skip("needs 8 host devices (run under dryrun env)")
+        return jax.make_mesh((8,), ("d",))
+
+    def test_psum_bytes(self, mesh8):
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from functools import partial
+
+        @partial(jax.jit, out_shardings=NamedSharding(mesh8, P()))
+        def fn(x):
+            return x.sum(axis=0)
+
+        spec = S((8, 4096), jnp.float32,
+                 sharding=NamedSharding(mesh8, P("d", None)))
+        text = jax.jit(fn).lower(spec).compile().as_text()
+        cost = H.analyze(text)
+        assert cost.total_collective_bytes >= 4096 * 4  # one row reduced

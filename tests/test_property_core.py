@@ -1,0 +1,132 @@
+"""Property-based tests (hypothesis) for the compiler's core invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import frontend, pipeline
+from repro.core.affine import AExpr, pack_banked, unpack_banked
+
+
+# ---------------------------------------------------------------------------
+# Affine algebra laws
+# ---------------------------------------------------------------------------
+
+_vars = st.sampled_from(["i", "j", "k"])
+_coeffs = st.integers(min_value=-6, max_value=6)
+_consts = st.integers(min_value=-20, max_value=20)
+
+
+@st.composite
+def affine_exprs(draw, depth=2):
+    e = AExpr.const_(draw(_consts))
+    for _ in range(draw(st.integers(1, 3))):
+        e = e + AExpr.var(draw(_vars)) * draw(_coeffs)
+    if depth > 0 and draw(st.booleans()):
+        c = draw(st.integers(2, 5))
+        e = e.floordiv(c) if draw(st.booleans()) else e.mod(c)
+        e = e + AExpr.var(draw(_vars)) * draw(_coeffs)
+    return e
+
+
+_envs = st.fixed_dictionaries(
+    {"i": st.integers(0, 30), "j": st.integers(0, 30), "k": st.integers(0, 30)})
+
+
+class TestAffineProperties:
+    @given(e=affine_exprs(), env=_envs, c=st.integers(2, 7))
+    @settings(max_examples=200, deadline=None)
+    def test_divmod_reconstruction(self, e, env, c):
+        """(e // c) * c + (e % c) == e  pointwise."""
+        lhs = (e.floordiv(c) * c + e.mod(c)).evaluate(env)
+        assert lhs == e.evaluate(env)
+
+    @given(e=affine_exprs(), env=_envs, c=st.integers(2, 7))
+    @settings(max_examples=200, deadline=None)
+    def test_fold_preserves_value(self, e, env, c):
+        """Folding rules never change the evaluated result."""
+        assert e.mod(c).evaluate(env) == e.evaluate(env) % c
+        assert e.floordiv(c).evaluate(env) == e.evaluate(env) // c
+
+    @given(e=affine_exprs(), env=_envs,
+           sub=st.integers(0, 10), c=st.integers(2, 5))
+    @settings(max_examples=200, deadline=None)
+    def test_substitute_consistent(self, e, env, sub, c):
+        """substitute(var -> expr) == evaluate with composed env."""
+        repl = AExpr.var("j") * c + sub
+        e2 = e.substitute({"i": repl})
+        env2 = dict(env)
+        env2["i"] = repl.evaluate(env)
+        assert e2.evaluate(env) == e.evaluate(env2)
+
+    @given(e=affine_exprs(), c=st.integers(2, 5), a=st.integers(0, 4))
+    @settings(max_examples=200, deadline=None)
+    def test_stripmine_fold_is_constant_bank(self, e, c, a):
+        """After i := c*ii + a with a < c, (i % c) is the constant a."""
+        if a >= c:
+            a = a % c
+        i = AExpr.var("i")
+        folded = i.mod(c).substitute({"i": AExpr.var("ii") * c + a})
+        assert folded.is_const() and folded.const_value() == a
+
+
+# ---------------------------------------------------------------------------
+# Banking layout bijection
+# ---------------------------------------------------------------------------
+
+class TestBankingProperties:
+    @given(
+        dims=st.lists(st.integers(1, 9), min_size=1, max_size=3),
+        factor=st.integers(1, 4),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    @settings(max_examples=120, deadline=None)
+    def test_pack_unpack_bijection(self, dims, factor, seed):
+        factors = tuple(min(factor, d) for d in dims)
+        rng = np.random.default_rng(seed)
+        arr = rng.normal(size=tuple(dims)).astype(np.float32)
+        out = unpack_banked(pack_banked(arr, factors), dims, factors)
+        np.testing.assert_array_equal(out, arr)
+
+    @given(
+        dims=st.lists(st.integers(2, 8), min_size=2, max_size=2),
+        factor=st.sampled_from([2]),
+    )
+    @settings(max_examples=40, deadline=None)
+    def test_every_element_lands_in_declared_bank(self, dims, factor):
+        """Cyclic banking invariant: element (i,j) lives in bank
+        (i%f)*f + (j%f) at intra position (i//f, j//f)."""
+        arr = np.arange(dims[0] * dims[1], dtype=np.float32).reshape(dims)
+        factors = (factor, factor)
+        packed = pack_banked(arr, factors)
+        for i in range(dims[0]):
+            for j in range(dims[1]):
+                bank = (i % factor) * factor + (j % factor)
+                assert packed[bank, i // factor, j // factor] == arr[i, j]
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: random small MLPs, every banking config agrees with the oracle
+# ---------------------------------------------------------------------------
+
+class TestCompilerAgreesWithOracle:
+    @given(
+        in_f=st.sampled_from([4, 6, 8]),
+        hid=st.sampled_from([4, 8]),
+        out_f=st.sampled_from([2, 4]),
+        rows=st.sampled_from([1, 2]),
+        factor=st.sampled_from([1, 2]),
+        mode=st.sampled_from(["layout", "branchy"]),
+        seed=st.integers(0, 1000),
+    )
+    @settings(max_examples=25, deadline=None)
+    def test_random_mlp(self, in_f, hid, out_f, rows, factor, mode, seed):
+        rng = np.random.default_rng(seed)
+        m = frontend.Sequential(
+            frontend.Linear(in_f, hid, rng=rng), frontend.ReLU(),
+            frontend.Linear(hid, out_f, rng=rng))
+        x = rng.normal(size=(rows, in_f)).astype(np.float32)
+        d = pipeline.compile_model(m, [(rows, in_f)], factor=factor,
+                                   mode=mode, check_hazards=(mode == "layout"))
+        hw = d.run({"arg0": x})[0]
+        jx = d.run_oracle({"arg0": x})[0]
+        np.testing.assert_allclose(hw, jx, rtol=1e-4, atol=1e-5)

@@ -1,0 +1,81 @@
+"""Property tests (hypothesis) for model-side numerical kernels."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref as KREF
+from repro.models.ssm_ops import chunked_decay_scan, decay_scan_step
+
+
+class TestChunkedDecayScan:
+    @given(
+        s=st.sampled_from([16, 32, 48]),
+        chunk=st.sampled_from([4, 8, 16]),
+        dk=st.sampled_from([4, 8]),
+        scalar=st.booleans(),
+        mode=st.sampled_from(["inclusive", "bonus"]),
+        seed=st.integers(0, 1000),
+    )
+    @settings(max_examples=30, deadline=None)
+    def test_matches_stepwise_reference(self, s, chunk, dk, scalar, mode,
+                                        seed):
+        if s % chunk:
+            chunk = s
+        rng = np.random.default_rng(seed)
+        b, h, dv = 1, 2, 4
+        q = jnp.asarray(rng.normal(size=(b, h, s, dk)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(b, h, s, dk)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(b, h, s, dv)), jnp.float32)
+        w_full = jnp.asarray(-np.abs(rng.normal(size=(b, h, s, dk))) * 0.4,
+                             jnp.float32)
+        u = jnp.asarray(rng.normal(size=(h, dk)), jnp.float32) \
+            if mode == "bonus" else None
+        if scalar and mode == "inclusive":
+            w = w_full[..., 0]                      # (b,h,s) scalar decay
+            w_ref = jnp.broadcast_to(w[..., None], (b, h, s, dk))
+        else:
+            w = w_full
+            w_ref = w_full
+        out = chunked_decay_scan(q, k, v, w, u=u, chunk=chunk,
+                                 diag_mode=mode)
+        expect = KREF.ssm_scan_ref(q, k, v, w_ref, u=u, diag_mode=mode)
+        np.testing.assert_allclose(out, expect, rtol=2e-4, atol=2e-4)
+
+    @given(seed=st.integers(0, 500), steps=st.integers(2, 12))
+    @settings(max_examples=25, deadline=None)
+    def test_decode_step_composes(self, seed, steps):
+        """Repeated decay_scan_step == chunked scan over the sequence."""
+        rng = np.random.default_rng(seed)
+        b, h, dk, dv = 1, 2, 4, 4
+        q = jnp.asarray(rng.normal(size=(b, h, steps, dk)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(b, h, steps, dk)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(b, h, steps, dv)), jnp.float32)
+        w = jnp.asarray(-np.abs(rng.normal(size=(b, h, steps, dk))) * 0.3,
+                        jnp.float32)
+        full = KREF.ssm_scan_ref(q, k, v, w)
+        hstate = jnp.zeros((b, h, dk, dv), jnp.float32)
+        for t in range(steps):
+            o, hstate = decay_scan_step(hstate, q[:, :, t], k[:, :, t],
+                                        v[:, :, t], w[:, :, t])
+            np.testing.assert_allclose(o, full[:, :, t], rtol=2e-4,
+                                       atol=2e-4)
+
+    def test_state_handoff_equals_monolithic(self):
+        """Scanning two halves with return_state/h0 == one full scan."""
+        rng = np.random.default_rng(0)
+        b, h, s, dk, dv = 1, 2, 32, 4, 4
+        q = jnp.asarray(rng.normal(size=(b, h, s, dk)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(b, h, s, dk)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(b, h, s, dv)), jnp.float32)
+        w = jnp.asarray(-np.abs(rng.normal(size=(b, h, s, dk))) * 0.2,
+                        jnp.float32)
+        full = chunked_decay_scan(q, k, v, w, chunk=8)
+        o1, hmid = chunked_decay_scan(q[:, :, :16], k[:, :, :16],
+                                      v[:, :, :16], w[:, :, :16], chunk=8,
+                                      return_state=True)
+        o2 = chunked_decay_scan(q[:, :, 16:], k[:, :, 16:], v[:, :, 16:],
+                                w[:, :, 16:], chunk=8, h0=hmid)
+        np.testing.assert_allclose(jnp.concatenate([o1, o2], axis=2), full,
+                                   rtol=1e-5, atol=1e-5)
