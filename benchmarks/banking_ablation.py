@@ -4,7 +4,10 @@
    (the c^d blow-up), surviving div/mod units, unprovable hazards.
 2. restructured vs duplicated-FSM schedules (par/seq rewrite).
 3. unbanked parallelism: port-conflict serialization (why banking exists).
-4. TPU analogue: MoE banked (static einsum) vs gather dispatch — HLO gather
+4. resource sharing: bound vs one-unit-per-statement designs — the extra
+   column the binding pass adds to the paper's resource table (LUT/DSP
+   reduction at identical cycle counts).
+5. TPU analogue: MoE banked (static einsum) vs gather dispatch — HLO gather
    op census at small scale.
 """
 from __future__ import annotations
@@ -70,6 +73,30 @@ def unbanked_parallelism(emit) -> None:
          f"|banked_speedup={cyc_seq / cyc_banked:.2f}x")
 
 
+def sharing_ablation(emit) -> None:
+    """Shared vs unshared resource column: the binding pass must cut LUT+DSP
+    sharply at *identical* cycle counts (it only rebinds exclusive groups)."""
+    for name, model, shape in (
+            ("ffnn", frontend.paper_ffnn(), (1, 64)),
+            ("matmul", frontend.Linear(64, 48, bias=False), (1, 64))):
+        for f in (2, 4):
+            ds = pipeline.compile_model(model, [shape], factor=f, share=True)
+            du = pipeline.compile_model(model, [shape], factor=f, share=False)
+            if ds.estimate.cycles != du.estimate.cycles:  # survives python -O
+                raise RuntimeError(
+                    f"sharing must be latency-neutral: {name} f={f} "
+                    f"{ds.estimate.cycles} != {du.estimate.cycles}")
+            rs, ru = ds.estimate.resources, du.estimate.resources
+            cut = 1.0 - (rs["LUT"] + rs["DSP"]) / (ru["LUT"] + ru["DSP"])
+            emit(f"share_{name}_f{f}_cycles", 0.0, ds.estimate.cycles)
+            emit(f"share_{name}_f{f}_lut", 0.0,
+                 f"unshared={ru['LUT']}|shared={rs['LUT']}")
+            emit(f"share_{name}_f{f}_dsp", 0.0,
+                 f"unshared={ru['DSP']}|shared={rs['DSP']}")
+            emit(f"share_{name}_f{f}_lutdsp_cut", 0.0, f"{cut * 100:.1f}%")
+            emit(f"share_{name}_f{f}_pools", 0.0, ds.sharing.summary())
+
+
 def moe_dispatch_hlo(emit) -> None:
     """TPU analogue: banked (layout-embedded) vs gather (branchy) MoE."""
     import dataclasses
@@ -101,4 +128,5 @@ def run(emit) -> None:
     banking_modes(emit)
     restructure_ablation(emit)
     unbanked_parallelism(emit)
+    sharing_ablation(emit)
     moe_dispatch_hlo(emit)

@@ -3,6 +3,11 @@
 Vitis HLS cannot run in this environment; the paper's published Vitis and
 Calyx numbers are embedded as reference constants and printed next to our
 Calyx-flow estimates so the regimes and ratios are directly comparable.
+
+All compiles here pass ``share=False``: the paper's toolchain has no
+binding stage (resource sharing is its future work), so its Table 1/2
+resource numbers correspond to one-unit-per-statement designs.  The
+shared-vs-unshared column lives in benchmarks/banking_ablation.py.
 """
 from __future__ import annotations
 
@@ -49,7 +54,8 @@ def fig2_latency(emit) -> Dict[str, Dict]:
     out = {}
     for name, (model, shape) in _models().items():
         t0 = time.time()
-        d = pipeline.compile_model(model, [shape], factor=1)
+        d = pipeline.compile_model(model, [shape], factor=1,
+                                   share=False)
         wall = (time.time() - t0) * 1e6
         est = d.estimate
         out[name] = est.as_dict()
@@ -61,7 +67,8 @@ def fig2_latency(emit) -> Dict[str, Dict]:
 def table1_resources(emit) -> Dict[str, Dict]:
     out = {}
     for name, (model, shape) in _models().items():
-        d = pipeline.compile_model(model, [shape], factor=1)
+        d = pipeline.compile_model(model, [shape], factor=1,
+                                   share=False)
         res = d.estimate.resources
         out[name] = res
         for r, ours in res.items():
@@ -79,7 +86,8 @@ def fig3_partition_sweep(emit) -> Dict[int, Dict]:
     results = {}
     for f in (1, 2, 4):
         t0 = time.time()
-        d = pipeline.compile_model(model, [shape], factor=f)
+        d = pipeline.compile_model(model, [shape], factor=f,
+                                   share=False)
         wall = (time.time() - t0) * 1e6
         results[f] = d.estimate.as_dict()
         emit(f"fig3_ffnn_f{f}_cycles", wall,

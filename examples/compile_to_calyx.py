@@ -1,8 +1,17 @@
 """Emit the Calyx-like IR for any of the paper's models to a .futil-style
 text file — the debuggability surface the paper highlights.
 
+Compile flow: trace -> affine -> parallelize/restructure -> bank ->
+Calyx lowering -> resource sharing (binding) -> estimate.  Sharing is on
+by default; ``--no-share`` reproduces the paper's one-unit-per-statement
+designs (its Table 2 resource numbers).  Shared pool cells show up in the
+emitted text as ``shared_<kind>_<n> = ...; // shared xK`` and each group
+lists the pool cells it drives (``group st_12<5> uses shared_fp_add_0``).
+
     PYTHONPATH=src python examples/compile_to_calyx.py --model ffnn \
         --factor 2 --out /tmp/ffnn_f2.futil
+    PYTHONPATH=src python examples/compile_to_calyx.py --model ffnn \
+        --factor 4 --no-share        # the paper's unshared resource story
 """
 import argparse
 
@@ -20,22 +29,28 @@ def main():
     ap.add_argument("--model", choices=list(MODELS), default="ffnn")
     ap.add_argument("--factor", type=int, default=2, choices=(1, 2, 4))
     ap.add_argument("--mode", choices=("layout", "branchy"), default="layout")
+    ap.add_argument("--no-share", action="store_true",
+                    help="skip the binding pass (paper's unshared designs)")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
     builder, shape = MODELS[args.model]
     d = pipeline.compile_model(builder(), [shape], factor=args.factor,
                                mode=args.mode,
-                               check_hazards=args.mode == "layout")
+                               check_hazards=args.mode == "layout",
+                               share=not args.no_share)
     text = d.calyx_text()
     out = args.out or f"/tmp/{args.model}_f{args.factor}_{args.mode}.futil"
     with open(out, "w") as f:
         f.write(text)
     e = d.estimate
-    print(f"model={args.model} factor={args.factor} mode={args.mode}")
+    print(f"model={args.model} factor={args.factor} mode={args.mode} "
+          f"share={not args.no_share}")
     print(f"  cycles={e.cycles}  fmax={e.fmax_mhz}MHz  wall={e.wall_us}us")
     print(f"  resources={e.resources}  fsm_states={e.fsm_states}")
     print(f"  cells={len(d.component.cells)}  groups={len(d.component.groups)}")
+    if d.sharing is not None:
+        print(f"  {d.sharing.summary()}")
     print(f"  wrote {len(text.splitlines())} lines -> {out}")
 
 

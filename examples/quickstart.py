@@ -3,8 +3,12 @@
     PYTHONPATH=src python examples/quickstart.py
 
 Walks the full pipeline on the paper's FFNN: trace -> affine -> parallelize
--> bank -> Calyx -> estimate, validates the hardware schedule against the
-jnp oracle, and prints the banking sweep the paper's Fig. 3 reports.
+-> bank -> Calyx -> resource sharing -> estimate, validates the hardware
+schedule against the jnp oracle, and prints the banking sweep the paper's
+Fig. 3 reports.  Resources shown are for the *shared* (bound) designs —
+cycles match the paper's unshared numbers exactly (binding is
+latency-neutral), but LUT/DSP land well below its Table 1/2; pass
+``share=False`` to ``compile_model`` for the paper's regime.
 """
 import numpy as np
 

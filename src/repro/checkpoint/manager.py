@@ -26,7 +26,9 @@ import numpy as np
 
 
 def _flatten(tree: Any) -> Tuple[List[Tuple[str, Any]], Any]:
-    flat, treedef = jax.tree.flatten_with_path(tree)
+    # jax.tree gained flatten_with_path only after 0.4.37; tree_util has
+    # carried it for much longer, so use the stable spelling.
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     items = []
     for path, leaf in flat:
         key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))

@@ -1,4 +1,4 @@
-"""Core compiler: the paper's PyTorch -> Calyx pipeline, in five stages.
+"""Core compiler: the paper's PyTorch -> Calyx pipeline, plus binding.
 
   frontend  : torch-like tracing        (PyTorch -> Allo)
   tensor_ir : Linalg-like tensor graph  (Allo -> Linalg)
@@ -6,7 +6,9 @@
   schedule  : par materialization + par/seq restructuring
   banking   : cyclic memory partitioning (layout-embedded vs branchy)
   calyx     : structural hardware IR    (CIRCT -> Calyx)
+  sharing   : resource binding onto shared functional-unit pools
   estimator : cycles / resources / timing
 """
 from .pipeline import CompiledDesign, compile_graph, compile_model  # noqa: F401
 from .banking import BankingSpec, BankConflictError  # noqa: F401
+from .sharing import SharingReport, share_cells  # noqa: F401

@@ -2,9 +2,14 @@
 
 Mirrors Calyx's split between *structure* (cells: registers, single-ported
 memories, HardFloat units, address arithmetic) and *control* (seq / par /
-if / repeat trees over group enables).  Every static statement instantiates
-its own cells — resource sharing is future work in the paper, and we model
-the same choice, which is exactly what makes the par-unrolled designs grow.
+if / repeat trees over group enables).  The lowering itself instantiates a
+fresh cell per static operation — the paper's choice, and what makes
+par-unrolled designs grow superlinearly; the downstream binding stage
+(``sharing.share_cells``) then rebinds expensive units used by mutually
+exclusive groups onto shared pools, so the emitted design pays for peak
+concurrency rather than statement count.  ``Cell.users`` records how many
+group-level uses a pooled cell serves (1 = private), which the estimator
+turns into operand-mux overhead.
 
 The lowering records, per group, the memory *port accesses* it performs;
 the estimator uses those to model Calyx's one-access-per-cycle memory
@@ -32,6 +37,7 @@ class Cell:
     kind: str                 # fp_add, fp_mul, ..., int_mul, int_divmod,
     words: int = 0            # mem_bank: capacity
     const: int = 0            # int_mul / int_divmod constant operand
+    users: int = 1            # group-level uses bound to this cell (sharing)
 
 
 @dataclasses.dataclass
@@ -274,13 +280,17 @@ def emit_text(comp: Component) -> str:
     for c in comp.cells.values():
         extra = f", words={c.words}" if c.kind == "mem_bank" else (
             f", const={c.const}" if c.const else "")
-        out.append(f"    {c.name} = {c.kind}(){extra};")
+        shared = f"  // shared x{c.users}" if c.users > 1 else ""
+        out.append(f"    {c.name} = {c.kind}(){extra};{shared}")
     out.append("  }")
     out.append("  groups {")
     for g in comp.groups.values():
         ports = " ".join(
             f"{'W' if p.is_store else 'R'}:{p.mem}[b={p.bank}]" for p in g.ports)
-        out.append(f"    group {g.name}<{g.latency}> {{ {ports} }}")
+        bound = [c for c in g.cells
+                 if c in comp.cells and comp.cells[c].users > 1]
+        uses = f" uses {', '.join(bound)}" if bound else ""
+        out.append(f"    group {g.name}<{g.latency}>{uses} {{ {ports} }}")
     out.append("  }")
     out.append("  control {")
 

@@ -190,6 +190,8 @@ def resources(comp: Component) -> Resources:
             res.add(F.INT_COSTS[cell.kind])
         else:
             raise KeyError(cell.kind)
+        if cell.users > 1:   # pooled by the sharing pass: operand steering
+            res.add(F.sharing_mux_cost(cell.kind, cell.users))
     states = fsm_states(comp.control)
     res.lut += F.FSM_LUT_PER_STATE * states
     res.lut += F.GROUP_FABRIC_LUT * len(comp.groups)

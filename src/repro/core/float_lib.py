@@ -97,6 +97,27 @@ def memory_brams(words: int) -> int:
     return math.ceil(words * WORD_BITS / BRAM_BITS)
 
 
+# Resource sharing (binding) steering.  A pooled unit needs a 2:1 32-bit mux
+# per operand for every user beyond the first, plus a grant/select register
+# bit — so sharing pays off only for units well above mux cost, which is why
+# sharing.SHAREABLE_KINDS excludes the cheap fabric.
+SHARING_MUX_LUT_PER_EXTRA_USER: Dict[str, int] = {
+    "fp_add": 34, "fp_sub": 34, "fp_mul": 34, "fp_div": 34,  # two operands
+    "fp_exp": 18,                                             # one operand
+    "int_mul": 18, "int_divmod": 34,
+}
+SHARING_MUX_FF_PER_EXTRA_USER = 2
+
+
+def sharing_mux_cost(kind: str, users: int) -> OpCost:
+    """Steering overhead of one shared cell serving ``users`` groups."""
+    extra = max(0, users - 1)
+    if not extra:
+        return OpCost(0, 0, 0, 0)
+    lut = SHARING_MUX_LUT_PER_EXTRA_USER.get(kind, 18) * extra
+    return OpCost(0, lut, SHARING_MUX_FF_PER_EXTRA_USER * extra, 0)
+
+
 # Control / FSM model.
 FSM_LUT_PER_STATE = 14
 FSM_FF_PER_STATE_BIT = 8

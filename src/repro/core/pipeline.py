@@ -1,6 +1,7 @@
 """End-to-end compile driver: PyTorch-like module -> Calyx estimate.
 
-``compile_model`` mirrors the paper's full flow:
+``compile_model`` mirrors the paper's full flow plus the binding stage the
+paper leaves to future work:
 
     frontend.trace      (PyTorch -> Allo -> Linalg)
     affine.lower_graph  (Linalg -> Affine/SCF/Memref)
@@ -8,7 +9,15 @@
     banking.apply_banking                (cyclic partitioning)
     banking.check_par_hazards            (static safety analysis)
     calyx.lower_program                  (CIRCT -> Calyx)
+    sharing.share_cells                  (resource binding; ``share=True``)
     estimator.estimate                   (Calyx -> "RTL" cost report)
+
+The sharing stage rebinds expensive functional units of mutually exclusive
+groups onto shared pools; it provably cannot change ``estimate.cycles``
+(group latencies, ports, and control are untouched — asserted below) and it
+never merges cells across ``par`` arms, so parallel speedups survive intact.
+Pass ``share=False`` to reproduce the paper's every-statement-owns-its-unit
+resource numbers (Table 2).
 
 The returned ``CompiledDesign`` also executes: ``run`` uses the *banked
 affine program* interpreted on numpy — proving the transformed hardware
@@ -21,7 +30,7 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
-from . import affine, banking, calyx, estimator, frontend, schedule
+from . import affine, banking, calyx, estimator, frontend, schedule, sharing
 from . import tensor_ir as T
 from . import jax_backend
 
@@ -34,6 +43,7 @@ class CompiledDesign:
     estimate: estimator.Estimate
     hazards: List[str]
     spec: banking.BankingSpec
+    sharing: Optional[sharing.SharingReport] = None
 
     def run(self, inputs: Dict[str, np.ndarray]) -> List[np.ndarray]:
         """Execute the banked hardware schedule (numpy interpreter)."""
@@ -57,7 +67,8 @@ class CompiledDesign:
 
 def compile_graph(graph: T.Graph, factor: int = 1, mode: str = "layout",
                   restructure: bool = True,
-                  check_hazards: bool = True) -> CompiledDesign:
+                  check_hazards: bool = True,
+                  share: bool = True) -> CompiledDesign:
     prog = affine.lower_graph(graph)
     if factor > 1:
         prog = schedule.parallelize(prog, factor)
@@ -71,14 +82,28 @@ def compile_graph(graph: T.Graph, factor: int = 1, mode: str = "layout",
         hazards = banking.check_par_hazards(
             prog, raise_on_conflict=(check_hazards and mode == "layout"))
     comp = calyx.lower_program(prog)
+    report = None
+    pre_cycles = None
+    if share:
+        pre_cycles = estimator.cycles(comp)
+        comp, report = sharing.share_cells(comp)
     est = estimator.estimate(comp)
-    return CompiledDesign(graph, prog, comp, est, hazards, spec)
+    if pre_cycles is not None and est.cycles != pre_cycles:
+        # load-bearing invariant: survives python -O
+        raise RuntimeError(
+            f"resource sharing changed the schedule "
+            f"({pre_cycles} -> {est.cycles} cycles) — binding must "
+            f"be latency-neutral")
+    return CompiledDesign(graph, prog, comp, est, hazards, spec,
+                          sharing=report)
 
 
 def compile_model(module: frontend.Module, input_shapes,
                   factor: int = 1, mode: str = "layout",
                   restructure: bool = True, name: str = "main",
-                  check_hazards: bool = True) -> CompiledDesign:
+                  check_hazards: bool = True,
+                  share: bool = True) -> CompiledDesign:
     graph = frontend.trace(module, input_shapes, name=name)
     return compile_graph(graph, factor=factor, mode=mode,
-                         restructure=restructure, check_hazards=check_hazards)
+                         restructure=restructure, check_hazards=check_hazards,
+                         share=share)

@@ -29,6 +29,24 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
+def _window_sums(w: jax.Array, chunk: int) -> jax.Array:
+    """Pairwise decay sums ``out[t, s, d] = sum_{s < i <= t} w[i, d]``.
+
+    Computed directly as per-window running sums (a fresh cumsum restarted
+    after every ``s``) rather than as the cumsum difference ``W_t - W_s``:
+    subtracting two long accumulations cancels catastrophically once |W|
+    grows with the chunk length, which is exactly what made large-chunk
+    runs drift from small-chunk runs.  Here the rounding error of each
+    entry is proportional to the *window* magnitude — large windows have
+    vanishing ``exp`` anyway, so the error lands where it cannot matter.
+    """
+    i_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)  # (s, i)
+    s_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    gated = jnp.where((i_idx > s_idx)[:, :, None], w[None, :, :], 0.0)
+    win = jnp.cumsum(gated, axis=1)       # win[s, t, d] = sum_{s < i <= t}
+    return jnp.transpose(win, (1, 0, 2))  # (t, s, d)
+
+
 def _scan_kernel(q_ref, k_ref, v_ref, w_ref, u_ref, o_ref, h_ref, *,
                  chunk: int, diag_mode: str):
     c = pl.program_id(1)
@@ -44,26 +62,32 @@ def _scan_kernel(q_ref, k_ref, v_ref, w_ref, u_ref, o_ref, h_ref, *,
 
     W = jnp.cumsum(w, axis=0)             # (C, dk) inclusive cumulative decay
     h0 = h_ref[...]                       # (dk, dv) state before this chunk
+    win = _window_sums(w, chunk)          # (C, C, dk) exact window decays
+    t_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    s_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
 
     if diag_mode == "inclusive":
         # o_t = q_t . h_t ; h_t includes token t
         qW = q * jnp.exp(W)               # decay from chunk start to t
         o_inter = jnp.dot(qW, h0, preferred_element_type=jnp.float32)
-        # intra: sum_{s<=t} exp(W_t - W_s) (q_t.k_s) v_s
+        # intra: sum_{s<=t} exp(sum_{s<i<=t} w_i) (q_t.k_s) v_s
         # (exponent masked BEFORE exp: upper triangle overflows otherwise)
-        mask = jnp.tril(jnp.ones((chunk, chunk), jnp.bool_))
-        diff = jnp.where(mask[:, :, None], W[:, None, :] - W[None, :, :],
-                         -1e30)
+        diff = jnp.where((s_idx <= t_idx)[:, :, None], win, -1e30)
         rel = jnp.exp(diff)                               # (C, C, dk)
         scores = jnp.einsum("td,tsd,sd->ts", q, rel, k)
         o = o_inter + jnp.dot(scores, v, preferred_element_type=jnp.float32)
     else:  # bonus (RWKV6): o_t reads h_{t-1}, diag via u
-        Wprev = W - w                     # decay chunk-start .. t-1
+        # exclusive cumulative decay (chunk start .. t-1) as a shift of the
+        # inclusive one — W - w would reintroduce the cancellation
+        Wprev = jnp.concatenate([jnp.zeros((1,) + W.shape[1:], W.dtype),
+                                 W[:-1]], axis=0)
         qW = q * jnp.exp(Wprev)
         o_inter = jnp.dot(qW, h0, preferred_element_type=jnp.float32)
-        mask = jnp.tril(jnp.ones((chunk, chunk), jnp.bool_), k=-1)
-        diff = jnp.where(mask[:, :, None], Wprev[:, None, :] - W[None, :, :],
-                         -1e30)
+        # exponent sum_{s<i<=t-1} w_i = win[t-1, s]: shift win along t
+        shifted = jnp.concatenate(
+            [jnp.zeros((1, chunk, win.shape[2]), win.dtype), win[:-1]],
+            axis=0)
+        diff = jnp.where((s_idx < t_idx)[:, :, None], shifted, -1e30)
         rel = jnp.exp(diff)                               # s <= t-1
         scores = jnp.einsum("td,tsd,sd->ts", q, rel, k)
         o = o_inter + jnp.dot(scores, v, preferred_element_type=jnp.float32)
@@ -73,10 +97,13 @@ def _scan_kernel(q_ref, k_ref, v_ref, w_ref, u_ref, o_ref, h_ref, *,
 
     o_ref[0] = o.astype(o_ref.dtype)
 
-    # state update: h' = exp(W_last) h0 + sum_s exp(W_last - W_s) k_s v_s
-    w_last = W[-1]                                         # (dk,)
-    k_dec = k * jnp.exp(w_last[None, :] - W)               # (C, dk)
-    h_ref[...] = (jnp.exp(w_last)[:, None] * h0
+    # state update: h' = exp(W_last) h0 + sum_s exp(sum_{s<i} w_i) k_s v_s.
+    # The per-position suffix decays are the last row of the window table
+    # (again direct sums, never W_last - W_s), and the full-chunk decay is a
+    # plain reduction — both keep the f32 carry consistent across chunkings.
+    w_total = jnp.sum(w, axis=0)                           # (dk,)
+    k_dec = k * jnp.exp(win[-1])                           # (C, dk)
+    h_ref[...] = (jnp.exp(w_total)[:, None] * h0
                   + jnp.dot(k_dec.T, v, preferred_element_type=jnp.float32))
 
 

@@ -235,6 +235,18 @@ def analyze(text: str) -> "ModuleCost":
                 tr += t * btr
                 for k, v in bcoll.items():
                     coll[k] = coll.get(k, 0.0) + t * v
+            elif op.opcode == "call":
+                # XLA:CPU wraps parallelized fusions (and whole entries) in
+                # plain calls; their bodies hold the real traffic-bearing
+                # ops.  Resolve callees from the op line itself — op names
+                # are only unique per computation, so indexing by name
+                # would collide across computations.
+                for callee in _called_computations(op):
+                    bfl, btr, bcoll = total(callee)
+                    fl += bfl
+                    tr += btr
+                    for k, v in bcoll.items():
+                        coll[k] = coll.get(k, 0.0) + v
             elif op.opcode == "conditional":
                 # hardware instantiates all branches; one executes per call
                 branches = [total(callee)
@@ -251,8 +263,9 @@ def analyze(text: str) -> "ModuleCost":
         return memo[name]
 
     # fusion internals: zero them (their boundary traffic counted by caller)
+    loop_comps = {n for pair in while_bodies.values() for n in pair}
     for fc in fusion_called:
-        if fc in comps and fc not in while_bodies.values():
+        if fc in comps and fc not in loop_comps:
             memo[fc] = (comps[fc].flops, 0.0, {})  # dots in fusions count
 
     fl, tr, coll = total(entry) if entry else (0.0, 0.0, {})

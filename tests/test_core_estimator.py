@@ -7,8 +7,12 @@ from repro.core import calyx, estimator, frontend, pipeline
 
 @pytest.fixture(scope="module")
 def ffnn_designs():
+    # share=False: the paper's Table 2 numbers predate any binding stage
+    # (resource sharing is explicitly future work there), so its regime
+    # assertions are against the one-unit-per-statement designs.  The
+    # sharing pass has its own regime tests in test_core_sharing.py.
     m = frontend.paper_ffnn()
-    return {f: pipeline.compile_model(m, [(1, 64)], factor=f)
+    return {f: pipeline.compile_model(m, [(1, 64)], factor=f, share=False)
             for f in (1, 2, 4)}
 
 
@@ -84,9 +88,10 @@ class TestEstimatorStructure:
 
     def test_mha_larger_than_ffnn(self):
         """Paper Table 1: MHA uses ~9x the LUTs of FFNN."""
-        mha = pipeline.compile_model(frontend.paper_mha(), [(8, 42)], factor=1)
+        mha = pipeline.compile_model(frontend.paper_mha(), [(8, 42)],
+                                     factor=1, share=False)
         ffnn = pipeline.compile_model(frontend.paper_ffnn(), [(1, 64)],
-                                      factor=1)
+                                      factor=1, share=False)
         assert (mha.estimate.resources["LUT"]
                 > 3 * ffnn.estimate.resources["LUT"])
         assert (mha.estimate.resources["DSP"]

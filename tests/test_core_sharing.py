@@ -1,0 +1,173 @@
+"""Resource-sharing (binding) pass: mutual-exclusion analysis, latency
+neutrality, resource reduction regimes, par safety, and end-to-end
+equivalence of shared designs against the jnp oracle."""
+import numpy as np
+import pytest
+
+from repro.core import estimator, frontend, pipeline, sharing
+from repro.core.calyx import (Cell, CIf, CPar, CRepeat, CSeq, Component,
+                              GEnable, Group)
+
+
+def _comp(control, group_cells, extra_cells=()):
+    """Minimal component: every named cell is an fp_add unless given."""
+    cells = {}
+    groups = {}
+    for gname, cnames in group_cells.items():
+        for c in cnames:
+            if c not in cells:
+                cells[c] = Cell(c, "fp_add")
+        groups[gname] = Group(gname, 3, list(cnames), [])
+    for cell in extra_cells:
+        cells[cell.name] = cell
+    return Component("t", cells, groups, control)
+
+
+class TestMutualExclusion:
+    def test_seq_children_exclusive(self):
+        ctl = CSeq([GEnable("a"), GEnable("b")])
+        assert sharing.concurrent_pairs(ctl) == set()
+        assert sharing.mutually_exclusive(ctl, "a", "b")
+
+    def test_par_arms_concurrent(self):
+        ctl = CPar([GEnable("a"), GEnable("b")])
+        assert sharing.concurrent_pairs(ctl) == {frozenset({"a", "b"})}
+        assert not sharing.mutually_exclusive(ctl, "a", "b")
+
+    def test_if_arms_exclusive(self):
+        ctl = CIf(0, GEnable("a"), GEnable("b"))
+        assert sharing.concurrent_pairs(ctl) == set()
+
+    def test_repeat_body_exclusive_across_iterations(self):
+        ctl = CRepeat(8, CSeq([GEnable("a"), GEnable("b")]), var="i")
+        assert sharing.concurrent_pairs(ctl) == set()
+
+    def test_seq_inside_par_arm(self):
+        # a,b share an arm (exclusive with each other), both race c
+        ctl = CPar([CSeq([GEnable("a"), GEnable("b")]), GEnable("c")])
+        pairs = sharing.concurrent_pairs(ctl)
+        assert pairs == {frozenset({"a", "c"}), frozenset({"b", "c"})}
+
+    def test_par_under_repeat_stays_concurrent(self):
+        ctl = CRepeat(4, CPar([GEnable("a"), GEnable("b")]), var="i")
+        assert not sharing.mutually_exclusive(ctl, "a", "b")
+
+    def test_group_not_exclusive_with_itself(self):
+        ctl = CSeq([GEnable("a")])
+        assert not sharing.mutually_exclusive(ctl, "a", "a")
+
+
+class TestBinding:
+    def test_sequential_groups_share_one_unit(self):
+        comp = _comp(CSeq([GEnable("g1"), GEnable("g2")]),
+                     {"g1": ["add1"], "g2": ["add2"]})
+        out, rep = sharing.share_cells(comp)
+        assert rep.cells_before == 2 and rep.cells_after == 1
+        (pool,) = [c for c in out.cells.values() if c.kind == "fp_add"]
+        assert pool.users == 2
+        assert out.groups["g1"].cells == out.groups["g2"].cells == [pool.name]
+
+    def test_par_arms_never_merge(self):
+        comp = _comp(CPar([GEnable("g1"), GEnable("g2")]),
+                     {"g1": ["add1"], "g2": ["add2"]})
+        out, rep = sharing.share_cells(comp)
+        assert rep.cells_after == 2
+        assert out.groups["g1"].cells != out.groups["g2"].cells
+        sharing.verify_sharing(out)  # must not raise
+
+    def test_same_group_uses_stay_distinct(self):
+        comp = _comp(CSeq([GEnable("g1")]), {"g1": ["add1", "add2"]})
+        out, rep = sharing.share_cells(comp)
+        assert rep.cells_after == 2
+        assert len(set(out.groups["g1"].cells)) == 2
+
+    def test_const_classes_not_merged(self):
+        cells = [Cell("m1", "int_mul", const=12), Cell("m2", "int_mul", const=48)]
+        comp = Component(
+            "t", {c.name: c for c in cells},
+            {"g1": Group("g1", 1, ["m1"], []), "g2": Group("g2", 1, ["m2"], [])},
+            CSeq([GEnable("g1"), GEnable("g2")]))
+        out, rep = sharing.share_cells(comp)
+        assert rep.cells_after == 2          # different constants: no merge
+        kinds = {(c.kind, c.const) for c in out.cells.values()}
+        assert kinds == {("int_mul", 12), ("int_mul", 48)}
+
+    def test_if_cond_cells_pinned(self):
+        cond_cell = Cell("mcond", "int_mul", const=12)
+        comp = _comp(
+            CSeq([CIf(0, GEnable("g1"), GEnable("g2"), cond_cells=["mcond"])]),
+            {"g1": ["add1"], "g2": ["add2"]},
+            extra_cells=[cond_cell])
+        out, _ = sharing.share_cells(comp)
+        assert "mcond" in out.cells          # untouched
+        assert out.cells["mcond"].users == 1
+
+    def test_unshareable_kinds_untouched(self):
+        reg = Cell("reg_x", "reg32")
+        comp = _comp(CSeq([GEnable("g1"), GEnable("g2")]),
+                     {"g1": ["add1", "reg_x"], "g2": ["reg_x"]},
+                     extra_cells=[reg])
+        comp.cells["reg_x"] = reg
+        out, _ = sharing.share_cells(comp)
+        assert out.cells["reg_x"].users == 1
+        assert "reg_x" in out.groups["g2"].cells
+
+
+class TestModelLevel:
+    @pytest.fixture(scope="class")
+    def matmul_pair(self):
+        m = frontend.Linear(64, 48, bias=False)
+        return (pipeline.compile_model(m, [(1, 64)], factor=4, share=True),
+                pipeline.compile_model(m, [(1, 64)], factor=4, share=False))
+
+    def test_sharing_preserves_cycles(self, matmul_pair):
+        ds, du = matmul_pair
+        assert ds.estimate.cycles == du.estimate.cycles
+        assert ds.estimate.fsm_states == du.estimate.fsm_states
+
+    def test_sharing_reduces_lut_dsp(self, matmul_pair):
+        """Acceptance: factor-4 layout-banked matmul drops >=25% LUT+DSP."""
+        ds, du = matmul_pair
+        shared = ds.estimate.resources["LUT"] + ds.estimate.resources["DSP"]
+        unshared = du.estimate.resources["LUT"] + du.estimate.resources["DSP"]
+        assert shared <= 0.75 * unshared, (shared, unshared)
+
+    def test_report_counts(self, matmul_pair):
+        ds, _ = matmul_pair
+        assert ds.sharing is not None
+        assert ds.sharing.cells_after < ds.sharing.cells_before
+        assert all(a <= b for b, a in ds.sharing.by_kind.values())
+        # every pool's users really exist in the component
+        for pool, origs in ds.sharing.pools.items():
+            assert pool in ds.component.cells
+            assert ds.component.cells[pool].users == len(origs)
+
+    def test_no_sharing_across_par(self, matmul_pair):
+        ds, _ = matmul_pair
+        sharing.verify_sharing(ds.component)  # must not raise
+
+    def test_emit_text_surfaces_bound_cells(self, matmul_pair):
+        ds, _ = matmul_pair
+        txt = ds.calyx_text()
+        assert "shared_fp_add" in txt
+        assert "// shared x" in txt
+        assert " uses shared_" in txt
+
+    def test_shared_ffnn_matches_oracle(self):
+        d = pipeline.compile_model(frontend.paper_ffnn(), [(1, 64)],
+                                   factor=4, share=True)
+        x = np.random.default_rng(3).normal(size=(1, 64)).astype(np.float32)
+        hw = d.run({"arg0": x})[0]
+        oracle = d.run_oracle({"arg0": x})[0]
+        np.testing.assert_allclose(hw, oracle, rtol=1e-4, atol=1e-5)
+
+    def test_sharing_keeps_banked_speedup(self):
+        m = frontend.paper_ffnn()
+        d1 = pipeline.compile_model(m, [(1, 64)], factor=1, share=True)
+        d4 = pipeline.compile_model(m, [(1, 64)], factor=4, share=True)
+        assert d4.estimate.cycles < 0.25 * d1.estimate.cycles
+
+    def test_mux_overhead_nonzero_for_shared(self, matmul_pair):
+        ds, _ = matmul_pair
+        over = sharing.mux_overhead(ds.component)
+        assert over.lut > 0

@@ -1,6 +1,8 @@
 """Property-based tests (hypothesis) for the compiler's core invariants."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import frontend, pipeline
