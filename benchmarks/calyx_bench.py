@@ -1,0 +1,121 @@
+"""Calyx-level perf tracking: estimator + simulator differential, as JSON.
+
+Runs the design matrix (matmul, conv2d, ffnn, attention) across banking
+factors {1,2,4} and share {on,off}; for each point it compiles, simulates
+cycle-accurately, and records a machine-readable row — estimated cycles,
+*measured* cycles, LUT/FF/DSP/BRAM, fsm states, fmax, the max abs error of
+the simulated outputs against the jnp oracle, and the simulator's dynamic
+counters.  The rows land in ``BENCH_calyx.json`` (override the path with
+``CALYX_BENCH_OUT``) so the perf trajectory is tracked across PRs; CI
+uploads the file as a build artifact.
+
+``CALYX_BENCH_DESIGNS=matmul,conv2d`` restricts the matrix (CI runs the
+two smallest designs).  Any estimate/measurement mismatch or oracle error
+above 1e-4 fails the section — the benchmark doubles as the end-to-end
+differential harness.
+
+The paper's CNN is deliberately not in the matrix: its 76x56 conv plane
+simulates in minutes, not seconds, and the conv2d microdesign already
+exercises the identical lowering.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core import frontend, pipeline
+
+# Smallest first — CI picks the leading two via CALYX_BENCH_DESIGNS.
+# Dims are divisible by every banking factor so the layout-mode
+# disjointness proof succeeds at factor 4.  This matrix is the single
+# source of truth: tests/test_core_sim.py imports it for the three-way
+# differential suite.
+DESIGNS = {
+    "matmul": (lambda: frontend.Linear(8, 8, bias=False), (4, 8)),
+    "conv2d": (lambda: frontend.Conv2d(2, 2, 3, 3), (2, 6, 6)),
+    "ffnn": (frontend.paper_ffnn, (1, 64)),
+    "attention": (lambda: frontend.MultiheadAttention(8, 2), (4, 8)),
+}
+
+FACTORS = (1, 2, 4)
+ORACLE_TOL = 1e-4
+
+
+def run(emit, out_path: str | None = None) -> None:
+    names = os.environ.get("CALYX_BENCH_DESIGNS", "")
+    selected = [n.strip() for n in names.split(",") if n.strip()] \
+        or list(DESIGNS)
+    rng = np.random.default_rng(0)
+    records = []
+    failures = []
+    for name in selected:
+        builder, shape = DESIGNS[name]
+        x = rng.normal(size=shape).astype(np.float32)
+        for factor in FACTORS:
+            for share in (True, False):
+                t0 = time.perf_counter()
+                try:
+                    d = pipeline.compile_model(builder(), [shape],
+                                               factor=factor, share=share)
+                    outs, stats = d.simulate({"arg0": x})
+                except Exception as exc:   # keep filling the matrix
+                    failures.append(
+                        f"{name} f{factor} share={share}: {exc}")
+                    records.append({"design": name, "banks": factor,
+                                    "share": share, "error": str(exc)})
+                    emit(f"calyx_{name}_f{factor}_"
+                         f"{'shared' if share else 'unshared'}",
+                         (time.perf_counter() - t0) * 1e6,
+                         f"ERROR {type(exc).__name__}")
+                    continue
+                wall_us = (time.perf_counter() - t0) * 1e6
+                oracle = d.run_oracle({"arg0": x})
+                err = max(float(np.max(np.abs(s - o)))
+                          for s, o in zip(outs, oracle))
+                est = d.estimate
+                rec = {
+                    "design": name,
+                    "banks": factor,
+                    "share": share,
+                    "cycles": est.cycles,
+                    "sim_cycles": stats.cycles,
+                    "cycles_match": stats.cycles == est.cycles,
+                    "oracle_max_abs_err": err,
+                    "LUT": est.resources["LUT"],
+                    "FF": est.resources["FF"],
+                    "DSP": est.resources["DSP"],
+                    "BRAM": est.resources["BRAM"],
+                    "fsm_states": est.fsm_states,
+                    "fmax_mhz": est.fmax_mhz,
+                    "wall_us": est.wall_us,
+                    "cells": len(d.component.cells),
+                    "groups": len(d.component.groups),
+                    "sim": stats.as_dict(),
+                }
+                records.append(rec)
+                tag = "shared" if share else "unshared"
+                emit(f"calyx_{name}_f{factor}_{tag}", wall_us,
+                     f"cycles={est.cycles}|sim={stats.cycles}|err={err:.1e}")
+                if stats.cycles != est.cycles:
+                    failures.append(
+                        f"{name} f{factor} share={share}: simulated "
+                        f"{stats.cycles} cycles but estimated {est.cycles}")
+                if err > ORACLE_TOL:
+                    failures.append(
+                        f"{name} f{factor} share={share}: oracle error "
+                        f"{err:.2e} exceeds {ORACLE_TOL}")
+    # Write the JSON before failing: on a divergence the artifact with the
+    # full per-design matrix (cycles_match=false rows) is the diagnostic.
+    out_path = out_path or os.environ.get("CALYX_BENCH_OUT",
+                                          "BENCH_calyx.json")
+    with open(out_path, "w") as f:
+        json.dump({"schema": 1,
+                   "generator": "benchmarks/calyx_bench.py",
+                   "records": records}, f, indent=2)
+        f.write("\n")
+    emit("calyx_bench_json", 0.0, f"{len(records)} records -> {out_path}")
+    if failures:
+        raise RuntimeError("; ".join(failures))

@@ -3,6 +3,7 @@
 Prints ``name,us_per_call,derived`` CSV per line.  Sections:
   paper_tables      Fig 2 / Table 1 / Fig 3 / Table 2 reproduction
   banking_ablation  layout-vs-branchy, restructuring, port model, MoE HLO
+  calyx_bench       simulator/estimator differential -> BENCH_calyx.json
   kernel_bench      Pallas kernel microbenches (interpret mode)
   roofline_report   per-cell roofline terms from the dry-run artifacts
 """
@@ -19,7 +20,8 @@ def _emit(name: str, us_per_call: float, derived) -> None:
 
 def main() -> None:
     sections = sys.argv[1:] or ["paper_tables", "banking_ablation",
-                                "kernel_bench", "roofline_report"]
+                                "calyx_bench", "kernel_bench",
+                                "roofline_report"]
     t0 = time.time()
     failures = []
     for section in sections:
@@ -31,6 +33,9 @@ def main() -> None:
             elif section == "banking_ablation":
                 from benchmarks import banking_ablation
                 banking_ablation.run(_emit)
+            elif section == "calyx_bench":
+                from benchmarks import calyx_bench
+                calyx_bench.run(_emit)
             elif section == "kernel_bench":
                 from benchmarks import kernel_bench
                 kernel_bench.run(_emit)

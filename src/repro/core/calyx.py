@@ -15,12 +15,22 @@ The lowering records, per group, the memory *port accesses* it performs;
 the estimator uses those to model Calyx's one-access-per-cycle memory
 constraint (conflicting parallel arms serialize — the behaviour that makes
 unbanked parallelism worthless and banked parallelism near-linear).
+
+Beyond the latency/cells/ports summary, every group now also carries its
+executable datapath semantics as a micro-op list (``Group.uops``, see
+``core.dataflow``): cell invocations with explicit operand routing,
+register reads/writes, and memory accesses with concrete address
+expressions and their in-group cycle offsets.  ``CIf`` keeps the lowered
+affine condition.  Together these make the component *runnable* — the
+cycle-accurate simulator (``core.sim``) executes exactly what was lowered
+instead of re-interpreting the affine program.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
+from . import dataflow as D
 from . import float_lib as F
 from .affine import (AExpr, Bin, Cond, ConstF, DivAtom, If, Load, Loop,
                      MemDecl, ModAtom, Par, Program, ReadReg, SelectC, SetReg,
@@ -55,6 +65,7 @@ class Group:
     latency: int
     cells: List[str]
     ports: List[PortAccess]
+    uops: List[D.UOp] = dataclasses.field(default_factory=list)
 
 
 # ---------------------------------------------------------------------------
@@ -94,6 +105,7 @@ class CIf(CNode):
     then: CNode
     els: CNode
     cond_cells: List[str] = dataclasses.field(default_factory=list)
+    cond: Optional[Cond] = None   # lowered affine condition (simulation)
 
 
 @dataclasses.dataclass
@@ -116,10 +128,16 @@ class _Lower:
         self.cells: Dict[str, Cell] = {}
         self.groups: Dict[str, Group] = {}
         self._n = 0
+        self._tmp = 0            # per-group micro-op temporary counter
 
     def fresh(self, stem: str) -> str:
         self._n += 1
         return f"{stem}{self._n}"
+
+    def tmp(self) -> int:
+        t = self._tmp
+        self._tmp += 1
+        return t
 
     def add_cell(self, kind: str, words: int = 0, const: int = 0,
                  name: Optional[str] = None) -> str:
@@ -150,37 +168,57 @@ class _Lower:
         return cycles
 
     # -- value expressions -----------------------------------------------------
-    def vexpr(self, e: VExpr, cells: List[str],
-              ports: List[PortAccess]) -> int:
-        """Instantiate cells; return latency (cycles) of this expr tree."""
+    def vexpr(self, e: VExpr, cells: List[str], ports: List[PortAccess],
+              uops: List[D.UOp], off: int) -> Tuple[int, int]:
+        """Instantiate cells and record micro-ops; return (latency, temp).
+
+        ``off`` is the cycle offset (within the enclosing group's window)
+        at which this expression starts evaluating — memory micro-ops are
+        stamped with the offset their port is actually busy, mirroring the
+        latency arithmetic below.
+        """
         if isinstance(e, ConstF):
-            return 0
+            t = self.tmp()
+            uops.append(D.UConst(t, e.value))
+            return 0, t
         if isinstance(e, ReadReg):
             self.add_cell("reg32", name=f"reg_{e.name}")
             cells.append(f"reg_{e.name}")
-            return 0
+            t = self.tmp()
+            uops.append(D.URegRead(t, e.name))
+            return 0, t
         if isinstance(e, Load):
-            lat = F.MEM_READ_CYCLES
-            lat += self._access(e.mem, e.idxs, False, cells, ports)
-            return lat
+            addr_cyc = self._access(e.mem, e.idxs, False, cells, ports)
+            t = self.tmp()
+            uops.append(D.UMemRead(t, e.mem, list(e.idxs), off + addr_cyc))
+            return F.MEM_READ_CYCLES + addr_cyc, t
         if isinstance(e, Bin):
             kind = {"add": "fp_add", "sub": "fp_sub", "mul": "fp_mul",
                     "div": "fp_div", "max": "fp_max", "min": "fp_min"}[e.op]
-            cells.append(self.add_cell(kind))
-            a = self.vexpr(e.a, cells, ports)
-            b = self.vexpr(e.b, cells, ports)
-            return F.FLOAT_COSTS[kind].cycles + max(a, b)
+            cname = self.add_cell(kind)
+            cells.append(cname)
+            a, ta = self.vexpr(e.a, cells, ports, uops, off)
+            b, tb = self.vexpr(e.b, cells, ports, uops, off)
+            t = self.tmp()
+            uops.append(D.UAlu(t, e.op, ta, tb, cell=cname))
+            return F.FLOAT_COSTS[kind].cycles + max(a, b), t
         if isinstance(e, Un):
             kind = {"exp": "fp_exp", "relu": "fp_relu", "neg": "fp_neg"}[e.op]
-            cells.append(self.add_cell(kind))
-            return F.FLOAT_COSTS[kind].cycles + self.vexpr(e.a, cells, ports)
+            cname = self.add_cell(kind)
+            cells.append(cname)
+            a, ta = self.vexpr(e.a, cells, ports, uops, off)
+            t = self.tmp()
+            uops.append(D.UAlu(t, e.op, ta, None, cell=cname))
+            return F.FLOAT_COSTS[kind].cycles + a, t
         if isinstance(e, SelectC):
             cells.append(self.add_cell("mux"))
             cells.append(self.add_cell("cmp"))
             cond_cyc = self.addr_cells_cycles(e.cond.expr, cells)
-            a = self.vexpr(e.a, cells, ports)
-            b = self.vexpr(e.b, cells, ports)
-            return F.IF_SELECT_CYCLES + cond_cyc + max(a, b)
+            a, ta = self.vexpr(e.a, cells, ports, uops, off)
+            b, tb = self.vexpr(e.b, cells, ports, uops, off)
+            t = self.tmp()
+            uops.append(D.USelect(t, e.cond, ta, tb))
+            return F.IF_SELECT_CYCLES + cond_cyc + max(a, b), t
         raise TypeError(e)
 
     def _access(self, mem: str, idxs: Sequence[AExpr], is_store: bool,
@@ -212,20 +250,27 @@ class _Lower:
         if isinstance(s, Store):
             cells: List[str] = []
             ports: List[PortAccess] = []
-            lat = self.vexpr(s.value, cells, ports)
-            lat += self._access(s.mem, s.idxs, True, cells, ports)
-            lat += F.MEM_WRITE_CYCLES
+            uops: List[D.UOp] = []
+            self._tmp = 0
+            lat, t = self.vexpr(s.value, cells, ports, uops, 0)
+            waddr = self._access(s.mem, s.idxs, True, cells, ports)
+            uops.append(D.UMemWrite(s.mem, list(s.idxs), t, off=lat + waddr))
+            lat += waddr + F.MEM_WRITE_CYCLES
             g = self.fresh("st_")
-            self.groups[g] = Group(g, lat, cells, ports)
+            self.groups[g] = Group(g, lat, cells, ports, uops)
             return GEnable(g)
         if isinstance(s, SetReg):
             cells = []
             ports = []
+            uops = []
+            self._tmp = 0
             self.add_cell("reg32", name=f"reg_{s.name}")
             cells.append(f"reg_{s.name}")
-            lat = max(1, self.vexpr(s.value, cells, ports))
+            vlat, t = self.vexpr(s.value, cells, ports, uops, 0)
+            uops.append(D.URegWrite(s.name, t))
+            lat = max(1, vlat)
             g = self.fresh("sr_")
-            self.groups[g] = Group(g, lat, cells, ports)
+            self.groups[g] = Group(g, lat, cells, ports, uops)
             return GEnable(g)
         if isinstance(s, Loop):
             self.add_cell("idx_reg", name=f"idx_{s.var}")
@@ -238,7 +283,7 @@ class _Lower:
             cond_cyc = self.addr_cells_cycles(s.cond.expr, cells)
             cells.append(self.add_cell("cmp"))
             return CIf(cond_cyc, self.block(s.then),
-                       self.block(s.els), cond_cells=cells)
+                       self.block(s.els), cond_cells=cells, cond=s.cond)
         raise TypeError(s)
 
     def block(self, stmts: List[Stmt]) -> CNode:
@@ -313,7 +358,9 @@ def emit_text(comp: Component) -> str:
             emit(node.body, ind + 1)
             out.append(f"{pad}}}")
         elif isinstance(node, CIf):
-            out.append(f"{pad}if <cond:{node.cond_latency}> {{")
+            cond_cells = (f" with [{', '.join(node.cond_cells)}]"
+                          if node.cond_cells else "")
+            out.append(f"{pad}if <cond:{node.cond_latency}>{cond_cells} {{")
             emit(node.then, ind + 1)
             out.append(f"{pad}}} else {{")
             emit(node.els, ind + 1)

@@ -1,0 +1,149 @@
+"""Executable datapath semantics (micro-ops) for Calyx groups.
+
+The lowering in ``calyx._Lower`` used to record only a *summary* of each
+group (latency, cells, port accesses); the computation itself was lost at
+lowering time, so the emitted component could be estimated but never
+executed.  This module defines the micro-op vocabulary the lowering now
+records per group — cell invocations, register reads/writes, and memory
+port accesses with concrete address expressions — plus the evaluator the
+cycle-accurate simulator (``core.sim``) drives.
+
+A micro-op list is a small SSA program over per-activation temporaries:
+temps are dense integers local to one group activation, so re-executing a
+group across ``repeat`` iterations never aliases stale state.  Micro-ops
+that occupy a memory port carry the cycle *offset* (within the group's
+activation window) at which the port is busy, consistent with the latency
+arithmetic of the lowering — the hook the simulator uses to enforce
+Calyx's one-access-per-cycle memory constraint at per-cycle granularity.
+
+``UAlu.cell`` names the functional unit that performs the operation.  When
+the binding pass (``sharing.share_cells``) rebinds units onto shared pools
+the name is rewritten to the pool cell while ``orig_cell`` keeps the
+pre-binding identity: every use keeps its own operand temporaries and its
+provenance, i.e. the per-user operand routing stays explicit, which is
+what lets the simulator arbitrate single ownership of shared units.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, List, Optional, Sequence
+
+from .affine import AExpr, Cond
+
+
+class UOp:
+    """Base class for group micro-operations."""
+
+
+@dataclasses.dataclass
+class UConst(UOp):
+    dst: int
+    value: float
+
+
+@dataclasses.dataclass
+class URegRead(UOp):
+    dst: int
+    reg: str
+
+
+@dataclasses.dataclass
+class UMemRead(UOp):
+    dst: int
+    mem: str
+    idxs: List[AExpr]
+    off: int                  # cycle offset of the port access in the group
+
+
+@dataclasses.dataclass
+class UAlu(UOp):
+    dst: int
+    op: str                   # add sub mul div max min | exp relu neg
+    a: int
+    b: Optional[int]          # None for unary ops
+    cell: str                 # functional unit (pool name after binding)
+    orig_cell: str = ""       # pre-binding cell name (set by sharing)
+
+
+@dataclasses.dataclass
+class USelect(UOp):
+    dst: int
+    cond: Cond
+    a: int
+    b: int
+
+
+@dataclasses.dataclass
+class URegWrite(UOp):
+    reg: str
+    src: int
+
+
+@dataclasses.dataclass
+class UMemWrite(UOp):
+    mem: str
+    idxs: List[AExpr]
+    src: int
+    off: int                  # cycle offset of the write-port access
+
+
+_BIN = {
+    "add": lambda a, b: a + b,
+    "sub": lambda a, b: a - b,
+    "mul": lambda a, b: a * b,
+    "div": lambda a, b: a / b,
+    "max": max,
+    "min": min,
+}
+
+
+def alu(op: str, a: float, b: Optional[float] = None) -> float:
+    """Reference FU semantics — must agree with ``affine.interpret``."""
+    fn = _BIN.get(op)
+    if fn is not None:
+        return fn(a, b)
+    if op == "exp":
+        return math.exp(min(a, 700.0))
+    if op == "relu":
+        return max(a, 0.0)
+    if op == "neg":
+        return -a
+    raise KeyError(op)
+
+
+def execute(uops: Sequence[UOp], env: Dict[str, int], regs: Dict[str, float],
+            read_mem: Callable[[UMemRead], float],
+            write_mem: Callable[[UMemWrite, float], None],
+            on_alu: Optional[Callable[[UAlu], None]] = None) -> int:
+    """Run one group activation; returns the micro-op count executed.
+
+    ``read_mem`` / ``write_mem`` receive the micro-op itself so the caller
+    can evaluate addresses against ``env``, track port occupancy, and touch
+    its backing store.  Register state persists across activations through
+    ``regs``; temporaries do not.
+    """
+    tmp: Dict[int, float] = {}
+    n = 0
+    for u in uops:
+        n += 1
+        if isinstance(u, UConst):
+            tmp[u.dst] = u.value
+        elif isinstance(u, URegRead):
+            tmp[u.dst] = regs[u.reg]
+        elif isinstance(u, UMemRead):
+            tmp[u.dst] = read_mem(u)
+        elif isinstance(u, UAlu):
+            if on_alu is not None:
+                on_alu(u)
+            tmp[u.dst] = alu(u.op, tmp[u.a],
+                             None if u.b is None else tmp[u.b])
+        elif isinstance(u, USelect):
+            tmp[u.dst] = tmp[u.a] if u.cond.evaluate(env) else tmp[u.b]
+        elif isinstance(u, URegWrite):
+            regs[u.reg] = tmp[u.src]
+        elif isinstance(u, UMemWrite):
+            write_mem(u, tmp[u.src])
+        else:
+            raise TypeError(u)
+    return n

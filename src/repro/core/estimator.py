@@ -4,7 +4,15 @@ Latency model:
   * ``seq``     — sum of children.
   * ``repeat``  — setup + extent * (body + per-iteration overhead).
   * ``if``      — cond + max(arms) + select overhead (both arms exist in
-                  hardware; only one executes).
+                  hardware; only one executes).  The control FSM is
+                  *statically timed*: the ``if`` state always reserves the
+                  worst-case arm latency, so every subtree's latency is
+                  input-independent.  This is why the cycle-accurate
+                  simulator (``core.sim``), which executes only the taken
+                  arm but charges the worst case, measures *exactly* this
+                  closed-form count — the differential tests in
+                  ``tests/test_core_sim.py`` assert equality with no
+                  tolerance, and there is no intentional divergence.
   * ``par``     — memory-port conflict model: arms that touch the same
                   (memory, bank) with non-shareable addresses must serialize
                   (Calyx memories accept one access per cycle).  We build a
@@ -73,6 +81,42 @@ def _arms_conflict(pa: List[PortAccess], pb: List[PortAccess]) -> bool:
     return False
 
 
+def par_conflict_components(comp: Component, node: CPar) -> List[List[int]]:
+    """Partition a ``par``'s arm indices into port-conflict components.
+
+    Arms in one component must serialize (they touch the same single-ported
+    (memory, bank) with non-broadcastable addresses); distinct components
+    run concurrently.  Shared by the closed-form latency model below and by
+    the cycle-accurate scheduler (``core.sim``) — the two agreeing on this
+    partition is what makes measured and estimated cycles identical.
+    """
+    arms = node.children
+    n = len(arms)
+    ports = [_collect_ports(comp, a, set()) for a in arms]
+    # union-find over conflict graph
+    parent = list(range(n))
+
+    def find(x: int) -> int:
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    for i in range(n):
+        for j in range(i + 1, n):
+            if _arms_conflict(ports[i], ports[j]):
+                parent[find(i)] = find(j)
+    comps: Dict[int, List[int]] = {}
+    for i in range(n):
+        comps.setdefault(find(i), []).append(i)
+    return list(comps.values())
+
+
+def par_join_cycles(n_arms: int) -> int:
+    """Join handshake: a done-signal reduction tree over the arms."""
+    return F.PAR_JOIN_CYCLES + max(0, math.ceil(math.log2(max(n_arms, 1))))
+
+
 # ---------------------------------------------------------------------------
 # Cycles
 # ---------------------------------------------------------------------------
@@ -96,28 +140,9 @@ def cycles(comp: Component, node: Optional[CNode] = None) -> int:
         if not arms:
             return 0
         lats = [cycles(comp, a) for a in arms]
-        ports = [_collect_ports(comp, a, set()) for a in arms]
-        n = len(arms)
-        # union-find over conflict graph
-        parent = list(range(n))
-
-        def find(x: int) -> int:
-            while parent[x] != x:
-                parent[x] = parent[parent[x]]
-                x = parent[x]
-            return x
-
-        for i in range(n):
-            for j in range(i + 1, n):
-                if _arms_conflict(ports[i], ports[j]):
-                    parent[find(i)] = find(j)
-        comp_lat: Dict[int, int] = {}
-        for i in range(n):
-            r = find(i)
-            comp_lat[r] = comp_lat.get(r, 0) + lats[i]
-        # join handshake: a done-signal reduction tree over the arms
-        join = F.PAR_JOIN_CYCLES + max(0, math.ceil(math.log2(max(n, 1))))
-        return max(comp_lat.values()) + join
+        comps = par_conflict_components(comp, node)
+        return (max(sum(lats[i] for i in c) for c in comps)
+                + par_join_cycles(len(arms)))
     raise TypeError(node)
 
 

@@ -19,18 +19,24 @@ never merges cells across ``par`` arms, so parallel speedups survive intact.
 Pass ``share=False`` to reproduce the paper's every-statement-owns-its-unit
 resource numbers (Table 2).
 
-The returned ``CompiledDesign`` also executes: ``run`` uses the *banked
-affine program* interpreted on numpy — proving the transformed hardware
-schedule computes the same function as the jnp oracle.
+The returned ``CompiledDesign`` executes at two levels: ``run`` interprets
+the *banked affine program* on numpy — proving the transformed hardware
+schedule computes the same function as the jnp oracle — while ``simulate``
+cycle-accurately executes the *lowered Calyx component* itself
+(``core.sim``), returning both output tensors and a measured cycle count
+that must equal ``estimate.cycles`` exactly.  Together they form the
+three-way differential harness: simulated ≡ interpreted ≡ oracle outputs,
+and measured ≡ estimated cycles.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 from . import affine, banking, calyx, estimator, frontend, schedule, sharing
+from . import sim as calyx_sim
 from . import tensor_ir as T
 from . import jax_backend
 
@@ -48,6 +54,24 @@ class CompiledDesign:
     def run(self, inputs: Dict[str, np.ndarray]) -> List[np.ndarray]:
         """Execute the banked hardware schedule (numpy interpreter)."""
         mems = affine.interpret(self.program, inputs, self.graph.params)
+        return self._extract_outputs(mems)
+
+    def simulate(self, inputs: Dict[str, np.ndarray]
+                 ) -> Tuple[List[np.ndarray], "calyx_sim.SimStats"]:
+        """Cycle-accurately execute the lowered Calyx component.
+
+        Runs the FSM scheduler over the component's control tree, firing
+        each group's micro-ops against real memory/register state, and
+        returns ``(outputs, SimStats)`` where ``SimStats.cycles`` is the
+        *measured* latency (equal to ``estimate.cycles`` by construction —
+        asserted by the differential tests).
+        """
+        mems, stats = calyx_sim.simulate(self.component, self.program,
+                                         inputs, self.graph.params)
+        return self._extract_outputs(mems), stats
+
+    def _extract_outputs(self, mems: Dict[str, np.ndarray]
+                         ) -> List[np.ndarray]:
         outs = []
         orig_shapes = self.program.meta.get("orig_shapes", {})
         for name in self.graph.outputs:

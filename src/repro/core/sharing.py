@@ -25,7 +25,11 @@ The pass has three parts:
 
 3. **Rewrite + verification**: ``Component.cells`` shrinks to the pool (plus
    untouched unshareable cells), every ``Group.cells`` list is rewritten to
-   the bound names, and :func:`verify_sharing` re-checks that no pool cell is
+   the bound names — and so is every group's micro-op list, where each
+   rebound ``UAlu`` keeps its own operand temporaries plus its pre-binding
+   cell as provenance, so per-user operand routing through the pool stays
+   explicit and the simulator can arbitrate single ownership — and
+   :func:`verify_sharing` re-checks that no pool cell is
    referenced from two concurrent groups — sharing must never serialize
    ``par`` arms, and because group latencies, ports, and the control tree are
    untouched, ``estimator.cycles`` is provably unchanged (the pipeline
@@ -40,6 +44,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Set, Tuple
 
+from . import dataflow as D
 from . import float_lib as F
 from .calyx import (Cell, CIf, CNode, CPar, CRepeat, CSeq, Component, GEnable,
                     Group)
@@ -208,9 +213,19 @@ def share_cells(comp: Component) -> Tuple[Component, SharingReport]:
         else:
             new_cells[name] = cell
 
+    def _route(u: D.UOp) -> D.UOp:
+        # Rebind the FU invocation onto its pool cell while keeping the
+        # use's own operand temporaries and pre-binding identity — the
+        # per-user operand routing the simulator arbitrates against.
+        if isinstance(u, D.UAlu) and u.cell in bound:
+            return dataclasses.replace(u, cell=bound[u.cell],
+                                       orig_cell=u.orig_cell or u.cell)
+        return u
+
     new_groups = {
         g.name: Group(g.name, g.latency,
-                      [bound.get(c, c) for c in g.cells], g.ports)
+                      [bound.get(c, c) for c in g.cells], g.ports,
+                      [_route(u) for u in g.uops])
         for g in comp.groups.values()
     }
 

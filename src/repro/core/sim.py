@@ -1,0 +1,302 @@
+"""Cycle-accurate FSM simulator for the Calyx-like IR.
+
+Where ``affine.interpret`` executes the *source* of the lowering and
+``estimator.cycles`` predicts the schedule of its *result* from a closed
+form, this module executes the lowered component itself: it walks the
+control tree as an FSM scheduler, fires each group's recorded micro-ops
+(``Group.uops``, see ``core.dataflow``) against real register/memory
+state, and advances a cycle clock — so both the output tensors *and* the
+cycle count are measured, not modeled.
+
+Scheduling semantics (the constructive twin of the estimator's model):
+
+* ``seq``     — children run back to back.
+* ``repeat``  — loop setup, then each iteration runs the body plus the
+                per-iteration overhead; the body's iteration variable is
+                bound in the environment the micro-ops evaluate addresses
+                against.
+* ``if``      — the condition is evaluated and only the taken arm
+                *executes*, but the control FSM is statically timed: the
+                state reserves the worst-case arm latency (the non-taken
+                arm's static cycles), matching real Calyx static control
+                and the estimator's ``max(arms)`` term.
+* ``par``     — arms are partitioned with the estimator's own
+                :func:`estimator.par_conflict_components`: arms that hit a
+                common single-ported (memory, bank) serialize inside their
+                component, components run concurrently, and the join
+                handshake closes the block.  The simulator additionally
+                enforces the constraint the partition is meant to uphold —
+                every memory access is stamped into a per-(memory, bank,
+                cycle) port table, and two same-cycle accesses raise
+                :class:`SimError` unless they are identical-address loads
+                (a broadcast from one read port).
+
+Shared functional units (``Cell.users > 1``, produced by
+``sharing.share_cells``) are arbitrated for single ownership: concurrent
+``par`` components must not both invoke the same pool cell, otherwise the
+design would need to serialize — exactly the invariant the binding pass
+promises.  Violations raise :class:`SimError` rather than silently
+mis-simulating.
+
+Because every control construct's duration is input-independent (see the
+``if`` rule), measured cycles structurally equal ``estimator.cycles``; the
+differential tests assert the equality exactly, making every compiled
+design an end-to-end hardware-semantics test.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, FrozenSet, List, Optional, Set, Tuple
+
+import numpy as np
+
+from . import dataflow as D
+from . import estimator
+from . import float_lib as F
+from .affine import Program, pack_banked
+from .calyx import CIf, CNode, CPar, CRepeat, CSeq, Component, GEnable
+
+
+class SimError(RuntimeError):
+    """A dynamic hardware-semantics violation (port clash, FU contention)."""
+
+
+@dataclasses.dataclass
+class SimStats:
+    """Measured facts about one simulation run."""
+    cycles: int = 0                  # measured end-to-end latency
+    group_activations: int = 0
+    uops: int = 0
+    mem_reads: int = 0
+    mem_writes: int = 0
+    broadcast_reads: int = 0         # same-cycle identical-address loads
+    par_blocks: int = 0              # par nodes executed (dynamic count)
+    serialized_arms: int = 0         # arms forced behind a sibling by ports
+    fu_grants: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+    def as_dict(self) -> Dict[str, object]:
+        return dataclasses.asdict(self)
+
+
+class _Sim:
+    def __init__(self, comp: Component, prog: Program):
+        self.comp = comp
+        self.prog = prog
+        self.stats = SimStats()
+        self.regs: Dict[str, float] = {}
+        self.mems: Dict[str, np.ndarray] = {}
+        self._env: Dict[str, int] = {}
+        self._gstart = 0                       # active group's start cycle
+        self._par_depth = 0                    # live par nesting depth
+        # (mem, bank, cycle) -> (is_store, address-tuple).  Clashes can only
+        # happen between accesses whose windows overlap — i.e. inside one
+        # group or under a live par — so the table is cleared whenever the
+        # schedule is provably past all stamped cycles (see run/_run_par),
+        # bounding it to the widest concurrent window instead of the run.
+        self._ports: Dict[Tuple[str, int, int], Tuple[bool, tuple]] = {}
+        # memoization keyed by control-node identity (the tree is static)
+        self._static: Dict[int, int] = {}
+        self._components: Dict[int, List[List[int]]] = {}
+        self._shared: Dict[int, FrozenSet[str]] = {}
+        self._par_checked: Set[int] = set()
+
+    # -- memory state ---------------------------------------------------------
+    def init_mems(self, inputs: Dict[str, np.ndarray],
+                  params: Dict[str, np.ndarray]) -> None:
+        orig_shapes = self.prog.meta.get("orig_shapes", {})
+        for name, decl in self.prog.mems.items():
+            if decl.role in ("input", "param"):
+                src = inputs[name] if decl.role == "input" else params[name]
+                arr = np.asarray(src, dtype=np.float64)
+                if decl.banks:
+                    arr = pack_banked(arr.reshape(orig_shapes[name]),
+                                      decl.banks)
+                else:
+                    arr = arr.reshape(decl.shape)
+            else:
+                arr = np.zeros(decl.shape, dtype=np.float64)
+            self.mems[name] = arr.copy()
+
+    def _locate(self, mem: str, idxs) -> Tuple[tuple, int]:
+        vals = tuple(ix.evaluate(self._env) for ix in idxs)
+        if self.prog.mems[mem].banks:
+            return vals, int(vals[0])
+        return vals, 0
+
+    def _claim_port(self, mem: str, bank: int, cycle: int,
+                    is_store: bool, addr: tuple) -> None:
+        key = (mem, bank, cycle)
+        prev = self._ports.get(key)
+        if prev is None:
+            self._ports[key] = (is_store, addr)
+            return
+        pstore, paddr = prev
+        if not is_store and not pstore and paddr == addr:
+            self.stats.broadcast_reads += 1   # one read port feeds both
+            return
+        raise SimError(
+            f"memory port violation on {mem} bank {bank} at cycle {cycle}: "
+            f"{'write' if is_store else 'read'}@{addr} clashes with "
+            f"{'write' if pstore else 'read'}@{paddr} — Calyx memories "
+            f"accept one access per cycle")
+
+    def _read_mem(self, u: D.UMemRead) -> float:
+        vals, bank = self._locate(u.mem, u.idxs)
+        self._claim_port(u.mem, bank, self._gstart + u.off, False, vals)
+        self.stats.mem_reads += 1
+        return float(self.mems[u.mem][vals])
+
+    def _write_mem(self, u: D.UMemWrite, value: float) -> None:
+        vals, bank = self._locate(u.mem, u.idxs)
+        self._claim_port(u.mem, bank, self._gstart + u.off, True, vals)
+        self.stats.mem_writes += 1
+        self.mems[u.mem][vals] = value
+
+    def _on_alu(self, u: D.UAlu) -> None:
+        cell = self.comp.cells.get(u.cell)
+        if cell is not None and cell.users > 1:
+            self.stats.fu_grants[u.cell] = \
+                self.stats.fu_grants.get(u.cell, 0) + 1
+
+    # -- FSM scheduler --------------------------------------------------------
+    def run(self, node: CNode, start: int) -> int:
+        """Execute ``node`` beginning at absolute cycle ``start``; return
+        the cycle at which its done signal rises."""
+        if isinstance(node, GEnable):
+            g = self.comp.groups[node.group]
+            if not g.uops:
+                raise SimError(
+                    f"group {g.name} carries no micro-ops — the component "
+                    f"was built without datapath semantics (re-lower with "
+                    f"calyx.lower_program)")
+            self.stats.group_activations += 1
+            if self._par_depth == 0:
+                # sequential flow: earlier windows are strictly in the past
+                self._ports.clear()
+            self._gstart = start
+            self.stats.uops += D.execute(g.uops, self._env, self.regs,
+                                         self._read_mem, self._write_mem,
+                                         self._on_alu)
+            return start + g.latency
+        if isinstance(node, CSeq):
+            t = start
+            for ch in node.children:
+                t = self.run(ch, t)
+            return t
+        if isinstance(node, CRepeat):
+            t = start + F.LOOP_SETUP_CYCLES
+            for i in range(node.extent):
+                if node.var:
+                    self._env[node.var] = i
+                t = self.run(node.body, t) + F.LOOP_ITER_OVERHEAD
+            return t
+        if isinstance(node, CIf):
+            if node.cond is None:
+                raise SimError("if-node carries no condition — component "
+                               "predates the executable lowering")
+            body_start = start + node.cond_latency + F.IF_SELECT_CYCLES
+            taken = node.then if node.cond.evaluate(self._env) else node.els
+            other = node.els if taken is node.then else node.then
+            end = self.run(taken, body_start)
+            # statically-timed if: the FSM reserves the worst-case arm
+            return max(end, body_start + self._static_cycles(other))
+        if isinstance(node, CPar):
+            return self._run_par(node, start)
+        raise TypeError(node)
+
+    def _static_cycles(self, node: CNode) -> int:
+        key = id(node)
+        if key not in self._static:
+            self._static[key] = estimator.cycles(self.comp, node)
+        return self._static[key]
+
+    def _run_par(self, node: CPar, start: int) -> int:
+        arms = node.children
+        if not arms:
+            return start
+        self.stats.par_blocks += 1
+        comps = self._components.get(id(node))
+        if comps is None:
+            comps = estimator.par_conflict_components(self.comp, node)
+            self._components[id(node)] = comps
+        self._check_fu_arbitration(node, comps)
+        self._par_depth += 1
+        ends = []
+        for members in comps:
+            t = start                      # components start concurrently
+            for i in members:              # conflicting arms serialize
+                t = self.run(arms[i], t)
+            self.stats.serialized_arms += len(members) - 1
+            ends.append(t)
+        self._par_depth -= 1
+        if self._par_depth == 0:
+            self._ports.clear()            # everything stamped is now past
+        return max(ends) + estimator.par_join_cycles(len(arms))
+
+    # -- shared-FU arbitration ------------------------------------------------
+    def _subtree_shared_cells(self, node: CNode) -> FrozenSet[str]:
+        key = id(node)
+        got = self._shared.get(key)
+        if got is not None:
+            return got
+        if isinstance(node, GEnable):
+            out = frozenset(
+                c for c in self.comp.groups[node.group].cells
+                if c in self.comp.cells and self.comp.cells[c].users > 1)
+        elif isinstance(node, (CSeq, CPar)):
+            out = frozenset().union(
+                *[self._subtree_shared_cells(ch) for ch in node.children]) \
+                if node.children else frozenset()
+        elif isinstance(node, CRepeat):
+            out = self._subtree_shared_cells(node.body)
+        elif isinstance(node, CIf):
+            out = (self._subtree_shared_cells(node.then)
+                   | self._subtree_shared_cells(node.els))
+        else:
+            raise TypeError(node)
+        self._shared[key] = out
+        return out
+
+    def _check_fu_arbitration(self, node: CPar,
+                              comps: List[List[int]]) -> None:
+        """Concurrent components must not both own a shared pool cell.
+
+        Arms inside one conflict component serialize, so they may reuse a
+        pool cell across their (disjoint) windows; arms in *different*
+        components overlap in time, and a pool cell reachable from two of
+        them would need a second owner in the same cycle.  The structure
+        is static, so each par node is checked once per run.
+        """
+        if id(node) in self._par_checked or len(comps) <= 1:
+            self._par_checked.add(id(node))
+            return
+        self._par_checked.add(id(node))
+        sets = [frozenset().union(
+            *[self._subtree_shared_cells(node.children[i]) for i in members])
+            for members in comps]
+        for i in range(len(sets)):
+            for j in range(i + 1, len(sets)):
+                both = sets[i] & sets[j]
+                if both:
+                    raise SimError(
+                        f"shared cell(s) {sorted(both)} invoked from two "
+                        f"concurrent par components — single-owner "
+                        f"arbitration of shared functional units failed")
+
+
+def simulate(comp: Component, prog: Program,
+             inputs: Dict[str, np.ndarray],
+             params: Dict[str, np.ndarray]
+             ) -> Tuple[Dict[str, np.ndarray], SimStats]:
+    """Cycle-accurately execute ``comp`` (lowered from ``prog``).
+
+    Returns the final memory state (banked layout, as declared by the
+    program) and the measured :class:`SimStats`.  ``prog`` supplies the
+    memory declarations/roles and the banked packing of inputs and params —
+    the same staging a host performs before launching the accelerator.
+    """
+    sim = _Sim(comp, prog)
+    sim.init_mems(inputs, params)
+    end = sim.run(comp.control, 0)
+    sim.stats.cycles = end
+    return sim.mems, sim.stats
