@@ -1,18 +1,22 @@
-"""Calyx-level perf tracking: estimator + simulator differential, as JSON.
+"""Calyx-level perf tracking: the four-way differential matrix, as JSON.
 
 Runs the design matrix (matmul, conv2d, ffnn, attention) across banking
 factors {1,2,4} and share {on,off}; for each point it compiles, simulates
-cycle-accurately, and records a machine-readable row — estimated cycles,
-*measured* cycles, LUT/FF/DSP/BRAM, fsm states, fmax, the max abs error of
-the simulated outputs against the jnp oracle, and the simulator's dynamic
-counters.  The rows land in ``BENCH_calyx.json`` (override the path with
-``CALYX_BENCH_OUT``) so the perf trajectory is tracked across PRs; CI
-uploads the file as a build artifact.
+the Calyx component cycle-accurately, lowers to the RTL netlist, executes
+*that* with the RTL-level simulator, and records a machine-readable row —
+estimated cycles, Calyx-measured cycles, RTL-measured cycles, resources,
+fsm states, fmax, netlist size (FSMs/states/muxes/units/banks), emitted
+SystemVerilog module/LoC counts, the max abs error of the simulated
+outputs against the jnp oracle, and the simulators' dynamic counters.
+The rows land in ``BENCH_calyx.json`` (override the path with
+``CALYX_BENCH_OUT``) so the perf *and* netlist-size trajectory is tracked
+across PRs; CI uploads the file as a build artifact.
 
 ``CALYX_BENCH_DESIGNS=matmul,conv2d`` restricts the matrix (CI runs the
-two smallest designs).  Any estimate/measurement mismatch or oracle error
-above 1e-4 fails the section — the benchmark doubles as the end-to-end
-differential harness.
+two smallest designs).  Any estimate/measurement mismatch at either
+level, any RTL-vs-Calyx output divergence (bit-exact), any oracle error
+above 1e-4, or any Verilog lint violation fails the section — the
+benchmark doubles as the end-to-end differential harness.
 
 The paper's CNN is deliberately not in the matrix: its 76x56 conv plane
 simulates in minutes, not seconds, and the conv2d microdesign already
@@ -26,7 +30,7 @@ import time
 
 import numpy as np
 
-from repro.core import frontend, pipeline
+from repro.core import frontend, pipeline, verilog
 
 # Smallest first — CI picks the leading two via CALYX_BENCH_DESIGNS.
 # Dims are divisible by every banking factor so the layout-mode
@@ -61,6 +65,8 @@ def run(emit, out_path: str | None = None) -> None:
                     d = pipeline.compile_model(builder(), [shape],
                                                factor=factor, share=share)
                     outs, stats = d.simulate({"arg0": x})
+                    rtl_outs, rtl_stats = d.simulate_rtl({"arg0": x})
+                    sv_text = d.emit_verilog()
                 except Exception as exc:   # keep filling the matrix
                     failures.append(
                         f"{name} f{factor} share={share}: {exc}")
@@ -75,14 +81,21 @@ def run(emit, out_path: str | None = None) -> None:
                 oracle = d.run_oracle({"arg0": x})
                 err = max(float(np.max(np.abs(s - o)))
                           for s, o in zip(outs, oracle))
+                rtl_bitexact = all(np.array_equal(a, b)
+                                   for a, b in zip(rtl_outs, outs))
+                lint_errors = verilog.lint(sv_text)
                 est = d.estimate
+                netlist = d.to_rtl().stats()
                 rec = {
                     "design": name,
                     "banks": factor,
                     "share": share,
                     "cycles": est.cycles,
                     "sim_cycles": stats.cycles,
-                    "cycles_match": stats.cycles == est.cycles,
+                    "rtl_cycles": rtl_stats.cycles,
+                    "cycles_match": stats.cycles == est.cycles
+                                    == rtl_stats.cycles,
+                    "rtl_bitexact": rtl_bitexact,
                     "oracle_max_abs_err": err,
                     "LUT": est.resources["LUT"],
                     "FF": est.resources["FF"],
@@ -93,16 +106,38 @@ def run(emit, out_path: str | None = None) -> None:
                     "wall_us": est.wall_us,
                     "cells": len(d.component.cells),
                     "groups": len(d.component.groups),
+                    "netlist": netlist,
+                    "sv_modules": sum(
+                        1 for ln in sv_text.splitlines()
+                        if ln.startswith("module ")),
+                    "sv_loc": len(sv_text.splitlines()),
+                    "sv_lint_errors": len(lint_errors),
                     "sim": stats.as_dict(),
+                    "rtl_sim": rtl_stats.as_dict(),
                 }
                 records.append(rec)
                 tag = "shared" if share else "unshared"
                 emit(f"calyx_{name}_f{factor}_{tag}", wall_us,
-                     f"cycles={est.cycles}|sim={stats.cycles}|err={err:.1e}")
+                     f"cycles={est.cycles}|sim={stats.cycles}"
+                     f"|rtl={rtl_stats.cycles}|err={err:.1e}")
                 if stats.cycles != est.cycles:
                     failures.append(
                         f"{name} f{factor} share={share}: simulated "
                         f"{stats.cycles} cycles but estimated {est.cycles}")
+                if rtl_stats.cycles != est.cycles:
+                    failures.append(
+                        f"{name} f{factor} share={share}: RTL measured "
+                        f"{rtl_stats.cycles} cycles but estimated "
+                        f"{est.cycles}")
+                if not rtl_bitexact:
+                    failures.append(
+                        f"{name} f{factor} share={share}: RTL outputs "
+                        f"diverge bit-wise from the Calyx simulation")
+                if lint_errors:
+                    failures.append(
+                        f"{name} f{factor} share={share}: emitted Verilog "
+                        f"has {len(lint_errors)} lint violations "
+                        f"(first: {lint_errors[0]})")
                 if err > ORACLE_TOL:
                     failures.append(
                         f"{name} f{factor} share={share}: oracle error "
@@ -112,7 +147,7 @@ def run(emit, out_path: str | None = None) -> None:
     out_path = out_path or os.environ.get("CALYX_BENCH_OUT",
                                           "BENCH_calyx.json")
     with open(out_path, "w") as f:
-        json.dump({"schema": 1,
+        json.dump({"schema": 2,
                    "generator": "benchmarks/calyx_bench.py",
                    "records": records}, f, indent=2)
         f.write("\n")

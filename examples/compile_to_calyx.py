@@ -14,11 +14,19 @@ lists the pool cells it drives (``group st_12<5> uses shared_fp_add_0``).
         --factor 4 --no-share        # the paper's unshared resource story
     PYTHONPATH=src python examples/compile_to_calyx.py --model ffnn \
         --factor 2 --simulate        # execute the component cycle-accurately
+    PYTHONPATH=src python examples/compile_to_calyx.py --model ffnn \
+        --factor 2 --emit-verilog /tmp/ffnn_f2.sv --simulate-rtl
 
 ``--simulate`` runs the cycle-accurate simulator (``repro.core.sim``) on a
 random input: it executes the lowered component's micro-ops, measures the
 cycle count (which must equal the estimate), and reports the max abs error
 against the jnp oracle.
+
+``--emit-verilog PATH`` lowers the component to the structural RTL netlist
+and writes it as SystemVerilog; ``--simulate-rtl`` executes
+that netlist cycle-by-cycle (``repro.core.rtl_sim``) and checks the
+measured cycles against the estimate — the last two stages of the
+four-way differential harness.
 """
 import argparse
 
@@ -43,6 +51,12 @@ def main():
     ap.add_argument("--simulate", action="store_true",
                     help="cycle-accurately execute the lowered component "
                          "and check measured cycles against the estimate")
+    ap.add_argument("--emit-verilog", metavar="PATH", default=None,
+                    help="lower to the RTL netlist and write "
+                         "SystemVerilog to PATH")
+    ap.add_argument("--simulate-rtl", action="store_true",
+                    help="execute the RTL netlist cycle-by-cycle and check "
+                         "measured cycles against the estimate")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
@@ -79,6 +93,28 @@ def main():
               f"broadcast={stats.broadcast_reads} "
               f"serialized_arms={stats.serialized_arms} "
               f"shared_fu_grants={sum(stats.fu_grants.values())}")
+    if args.emit_verilog or args.simulate_rtl:
+        net = d.to_rtl()
+        ns = net.stats()
+        print(f"  netlist: fsms={ns['fsms']} states={ns['fsm_states']} "
+              f"units={ns['units']} banks={ns['banks']} mux2={ns['mux2']}")
+    if args.emit_verilog:
+        text = d.emit_verilog(args.emit_verilog)
+        print(f"  wrote {len(text.splitlines())} lines of SystemVerilog "
+              f"-> {args.emit_verilog}")
+    if args.simulate_rtl:
+        x = np.random.default_rng(0).normal(size=shape).astype(np.float32)
+        outs, rstats = d.simulate_rtl({"arg0": x})
+        oracle = d.run_oracle({"arg0": x})
+        err = max(float(np.max(np.abs(s - o)))
+                  for s, o in zip(outs, oracle))
+        verdict = ("matches estimate" if rstats.cycles == e.cycles
+                   else f"MISMATCH vs estimate {e.cycles}")
+        print(f"  rtl cycles={rstats.cycles} ({verdict}); "
+              f"max|out - oracle|={err:.2e}")
+        print(f"  rtl: transitions={rstats.fsm_transitions} "
+              f"groups={rstats.group_fires} reads={rstats.mem_reads} "
+              f"writes={rstats.mem_writes} par_forks={rstats.par_forks}")
 
 
 if __name__ == "__main__":

@@ -8,7 +8,11 @@
   calyx     : structural hardware IR    (CIRCT -> Calyx)
   sharing   : resource binding onto shared functional-unit pools
   estimator : cycles / resources / timing
+  rtl       : Calyx -> FSM + datapath netlist (structural RTL)
+  verilog   : netlist -> synthesizable SystemVerilog
+  rtl_sim   : cycle-driven two-state execution of the netlist
 """
 from .pipeline import CompiledDesign, compile_graph, compile_model  # noqa: F401
 from .banking import BankingSpec, BankConflictError  # noqa: F401
 from .sharing import SharingReport, share_cells  # noqa: F401
+from .rtl import Netlist, lower_component  # noqa: F401

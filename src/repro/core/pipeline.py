@@ -1,4 +1,4 @@
-"""End-to-end compile driver: PyTorch-like module -> Calyx estimate.
+"""End-to-end compile driver: PyTorch-like module -> synthesizable RTL.
 
 ``compile_model`` mirrors the paper's full flow plus the binding stage the
 paper leaves to future work:
@@ -10,7 +10,9 @@ paper leaves to future work:
     banking.check_par_hazards            (static safety analysis)
     calyx.lower_program                  (CIRCT -> Calyx)
     sharing.share_cells                  (resource binding; ``share=True``)
-    estimator.estimate                   (Calyx -> "RTL" cost report)
+    estimator.estimate                   (Calyx -> cost report)
+    rtl.lower_component                  (Calyx -> FSM+datapath netlist)
+    verilog.emit                         (netlist -> SystemVerilog)
 
 The sharing stage rebinds expensive functional units of mutually exclusive
 groups onto shared pools; it provably cannot change ``estimate.cycles``
@@ -19,14 +21,22 @@ never merges cells across ``par`` arms, so parallel speedups survive intact.
 Pass ``share=False`` to reproduce the paper's every-statement-owns-its-unit
 resource numbers (Table 2).
 
-The returned ``CompiledDesign`` executes at two levels: ``run`` interprets
-the *banked affine program* on numpy — proving the transformed hardware
-schedule computes the same function as the jnp oracle — while ``simulate``
-cycle-accurately executes the *lowered Calyx component* itself
-(``core.sim``), returning both output tensors and a measured cycle count
-that must equal ``estimate.cycles`` exactly.  Together they form the
-three-way differential harness: simulated ≡ interpreted ≡ oracle outputs,
-and measured ≡ estimated cycles.
+The returned ``CompiledDesign`` executes at three levels, forming the
+**four-way differential harness** against the jnp oracle:
+
+* ``run`` interprets the *banked affine program* on numpy — proving the
+  transformed hardware schedule computes the same function as the oracle;
+* ``simulate`` cycle-accurately executes the *lowered Calyx component*
+  (``core.sim``), measuring a cycle count that must equal
+  ``estimate.cycles`` exactly;
+* ``simulate_rtl`` executes the *RTL netlist itself* (``core.rtl_sim``) —
+  the same artifact ``emit_verilog`` prints — cycle by cycle through its
+  explicit FSM controllers, again measuring ``estimate.cycles`` exactly.
+
+RTL-simulated ≡ Calyx-simulated ≡ affine-interpreted outputs bit-for-bit,
+all ≡ oracle within float tolerance, and both measured cycle counts ≡ the
+closed-form estimate with zero tolerance — asserted by the differential
+matrix in ``tests/test_core_rtl.py`` / ``tests/test_core_sim.py``.
 """
 from __future__ import annotations
 
@@ -36,9 +46,12 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from . import affine, banking, calyx, estimator, frontend, schedule, sharing
+from . import rtl as rtl_ir
+from . import rtl_sim
 from . import sim as calyx_sim
 from . import tensor_ir as T
 from . import jax_backend
+from . import verilog
 
 
 @dataclasses.dataclass
@@ -50,9 +63,37 @@ class CompiledDesign:
     hazards: List[str]
     spec: banking.BankingSpec
     sharing: Optional[sharing.SharingReport] = None
+    _netlist: Optional[rtl_ir.Netlist] = dataclasses.field(
+        default=None, repr=False, compare=False)
+
+    def _validate_inputs(self, inputs: Dict[str, np.ndarray]) -> None:
+        """Check input names and shapes up front with a clear error.
+
+        Without this, a missing or misshaped input surfaces as a deep
+        ``KeyError``/``ValueError`` inside the micro-op evaluator, far
+        from the call site.
+        """
+        expected = {op.name: tuple(op.shape) for op in self.graph.ops
+                    if op.kind == "input"}
+        missing = sorted(set(expected) - set(inputs))
+        extra = sorted(set(inputs) - set(expected))
+        if missing or extra:
+            want = ", ".join(f"{n}{expected[n]}" for n in sorted(expected))
+            raise ValueError(
+                f"design {self.graph.name!r} takes inputs [{want}]; "
+                + (f"missing {missing}" if missing else "")
+                + ("; " if missing and extra else "")
+                + (f"unexpected {extra}" if extra else ""))
+        for name, shape in expected.items():
+            got = tuple(np.asarray(inputs[name]).shape)
+            if got != shape:
+                raise ValueError(
+                    f"input {name!r} of design {self.graph.name!r} has "
+                    f"shape {got}, expected {shape}")
 
     def run(self, inputs: Dict[str, np.ndarray]) -> List[np.ndarray]:
         """Execute the banked hardware schedule (numpy interpreter)."""
+        self._validate_inputs(inputs)
         mems = affine.interpret(self.program, inputs, self.graph.params)
         return self._extract_outputs(mems)
 
@@ -66,8 +107,42 @@ class CompiledDesign:
         *measured* latency (equal to ``estimate.cycles`` by construction —
         asserted by the differential tests).
         """
+        self._validate_inputs(inputs)
         mems, stats = calyx_sim.simulate(self.component, self.program,
                                          inputs, self.graph.params)
+        return self._extract_outputs(mems), stats
+
+    # -- RTL backend ----------------------------------------------------------
+    def to_rtl(self) -> rtl_ir.Netlist:
+        """Lower the Calyx component to the FSM + datapath netlist
+        (cached — the netlist is deterministic for a compiled design)."""
+        if self._netlist is None:
+            self._netlist = rtl_ir.lower_component(self.component,
+                                                   self.program)
+        return self._netlist
+
+    def emit_verilog(self, path: Optional[str] = None) -> str:
+        """Emit the netlist as SystemVerilog (structurally synthesizable;
+        simulation-level FP cores with a HardFloat drop-in point);
+        optionally write it to ``path``.  Deterministic byte-for-byte."""
+        text = verilog.emit(self.to_rtl())
+        if path is not None:
+            with open(path, "w") as f:
+                f.write(text)
+        return text
+
+    def simulate_rtl(self, inputs: Dict[str, np.ndarray]
+                     ) -> Tuple[List[np.ndarray], "rtl_sim.RtlStats"]:
+        """Execute the RTL netlist cycle-by-cycle (``core.rtl_sim``).
+
+        This drives the *netlist* — explicit FSM controllers, physical
+        memory banks, operand-muxed units — not the Calyx IR; outputs are
+        bit-equal to ``simulate``/``run`` and ``RtlStats.cycles`` equals
+        ``estimate.cycles`` exactly (the four-way differential contract).
+        """
+        self._validate_inputs(inputs)
+        mems, stats = rtl_sim.simulate(self.to_rtl(), inputs,
+                                       self.graph.params)
         return self._extract_outputs(mems), stats
 
     def _extract_outputs(self, mems: Dict[str, np.ndarray]
