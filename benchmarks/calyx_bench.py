@@ -1,16 +1,23 @@
 """Calyx-level perf tracking: the four-way differential matrix, as JSON.
 
 Runs the design matrix (matmul, conv2d, ffnn, attention) across banking
-factors {1,2,4} and share {on,off}; for each point it compiles, simulates
-the Calyx component cycle-accurately, lowers to the RTL netlist, executes
-*that* with the RTL-level simulator, and records a machine-readable row —
+factors {1,2,4}, share {on,off}, and the scheduling-layer ablation
+opt_level {0,2}; for each point it compiles, simulates the Calyx
+component cycle-accurately, lowers to the RTL netlist, executes *that*
+with the RTL-level simulator, and records a machine-readable row —
 estimated cycles, Calyx-measured cycles, RTL-measured cycles, resources,
-fsm states, fmax, netlist size (FSMs/states/muxes/units/banks), emitted
+fsm states, fmax, banking efficiency, the pipelined loops' initiation
+intervals, netlist size (FSMs/states/muxes/units/banks), emitted
 SystemVerilog module/LoC counts, the max abs error of the simulated
 outputs against the jnp oracle, and the simulators' dynamic counters.
-The rows land in ``BENCH_calyx.json`` (override the path with
-``CALYX_BENCH_OUT``) so the perf *and* netlist-size trajectory is tracked
-across PRs; CI uploads the file as a build artifact.
+The rows land in ``BENCH_calyx.json`` (schema 3; override the path with
+``CALYX_BENCH_OUT``) so the perf *and* netlist-size trajectory is
+tracked across PRs; CI uploads the file as a build artifact and gates
+on it (``scripts/check_perf_regression.py`` fails any point whose
+cycles regress >2% over the committed baseline).
+
+A ``calyx_opt_geomean_speedup`` summary line reports the geometric-mean
+opt_level 0 -> 2 cycle reduction across the matrix.
 
 ``CALYX_BENCH_DESIGNS=matmul,conv2d`` restricts the matrix (CI runs the
 two smallest designs).  Any estimate/measurement mismatch at either
@@ -25,18 +32,20 @@ exercises the identical lowering.
 from __future__ import annotations
 
 import json
+import math
 import os
 import time
+import warnings
 
 import numpy as np
 
-from repro.core import frontend, pipeline, verilog
+from repro.core import estimator, frontend, pipeline, verilog
 
 # Smallest first — CI picks the leading two via CALYX_BENCH_DESIGNS.
 # Dims are divisible by every banking factor so the layout-mode
 # disjointness proof succeeds at factor 4.  This matrix is the single
-# source of truth: tests/test_core_sim.py imports it for the three-way
-# differential suite.
+# source of truth: tests/test_core_sim.py and
+# tests/test_core_scheduling.py import it for the differential suites.
 DESIGNS = {
     "matmul": (lambda: frontend.Linear(8, 8, bias=False), (4, 8)),
     "conv2d": (lambda: frontend.Conv2d(2, 2, 3, 3), (2, 6, 6)),
@@ -45,6 +54,7 @@ DESIGNS = {
 }
 
 FACTORS = (1, 2, 4)
+OPT_LEVELS = (0, 2)          # the scheduling-layer ablation
 ORACLE_TOL = 1e-4
 
 
@@ -55,100 +65,127 @@ def run(emit, out_path: str | None = None) -> None:
     rng = np.random.default_rng(0)
     records = []
     failures = []
+    # cycles by (design, factor, share) per opt level, for the geomean
+    by_point: dict = {}
     for name in selected:
         builder, shape = DESIGNS[name]
         x = rng.normal(size=shape).astype(np.float32)
         for factor in FACTORS:
             for share in (True, False):
-                t0 = time.perf_counter()
-                try:
-                    d = pipeline.compile_model(builder(), [shape],
-                                               factor=factor, share=share)
-                    outs, stats = d.simulate({"arg0": x})
-                    rtl_outs, rtl_stats = d.simulate_rtl({"arg0": x})
-                    sv_text = d.emit_verilog()
-                except Exception as exc:   # keep filling the matrix
-                    failures.append(
-                        f"{name} f{factor} share={share}: {exc}")
-                    records.append({"design": name, "banks": factor,
-                                    "share": share, "error": str(exc)})
-                    emit(f"calyx_{name}_f{factor}_"
-                         f"{'shared' if share else 'unshared'}",
-                         (time.perf_counter() - t0) * 1e6,
-                         f"ERROR {type(exc).__name__}")
-                    continue
-                wall_us = (time.perf_counter() - t0) * 1e6
-                oracle = d.run_oracle({"arg0": x})
-                err = max(float(np.max(np.abs(s - o)))
-                          for s, o in zip(outs, oracle))
-                rtl_bitexact = all(np.array_equal(a, b)
-                                   for a, b in zip(rtl_outs, outs))
-                lint_errors = verilog.lint(sv_text)
-                est = d.estimate
-                netlist = d.to_rtl().stats()
-                rec = {
-                    "design": name,
-                    "banks": factor,
-                    "share": share,
-                    "cycles": est.cycles,
-                    "sim_cycles": stats.cycles,
-                    "rtl_cycles": rtl_stats.cycles,
-                    "cycles_match": stats.cycles == est.cycles
-                                    == rtl_stats.cycles,
-                    "rtl_bitexact": rtl_bitexact,
-                    "oracle_max_abs_err": err,
-                    "LUT": est.resources["LUT"],
-                    "FF": est.resources["FF"],
-                    "DSP": est.resources["DSP"],
-                    "BRAM": est.resources["BRAM"],
-                    "fsm_states": est.fsm_states,
-                    "fmax_mhz": est.fmax_mhz,
-                    "wall_us": est.wall_us,
-                    "cells": len(d.component.cells),
-                    "groups": len(d.component.groups),
-                    "netlist": netlist,
-                    "sv_modules": sum(
-                        1 for ln in sv_text.splitlines()
-                        if ln.startswith("module ")),
-                    "sv_loc": len(sv_text.splitlines()),
-                    "sv_lint_errors": len(lint_errors),
-                    "sim": stats.as_dict(),
-                    "rtl_sim": rtl_stats.as_dict(),
-                }
-                records.append(rec)
-                tag = "shared" if share else "unshared"
-                emit(f"calyx_{name}_f{factor}_{tag}", wall_us,
-                     f"cycles={est.cycles}|sim={stats.cycles}"
-                     f"|rtl={rtl_stats.cycles}|err={err:.1e}")
-                if stats.cycles != est.cycles:
-                    failures.append(
-                        f"{name} f{factor} share={share}: simulated "
-                        f"{stats.cycles} cycles but estimated {est.cycles}")
-                if rtl_stats.cycles != est.cycles:
-                    failures.append(
-                        f"{name} f{factor} share={share}: RTL measured "
-                        f"{rtl_stats.cycles} cycles but estimated "
-                        f"{est.cycles}")
-                if not rtl_bitexact:
-                    failures.append(
-                        f"{name} f{factor} share={share}: RTL outputs "
-                        f"diverge bit-wise from the Calyx simulation")
-                if lint_errors:
-                    failures.append(
-                        f"{name} f{factor} share={share}: emitted Verilog "
-                        f"has {len(lint_errors)} lint violations "
-                        f"(first: {lint_errors[0]})")
-                if err > ORACLE_TOL:
-                    failures.append(
-                        f"{name} f{factor} share={share}: oracle error "
-                        f"{err:.2e} exceeds {ORACLE_TOL}")
+                for opt in OPT_LEVELS:
+                    t0 = time.perf_counter()
+                    try:
+                        with warnings.catch_warnings():
+                            warnings.simplefilter(
+                                "ignore",
+                                estimator.BankingEfficiencyWarning)
+                            d = pipeline.compile_model(
+                                builder(), [shape], factor=factor,
+                                share=share, opt_level=opt)
+                        outs, stats = d.simulate({"arg0": x})
+                        rtl_outs, rtl_stats = d.simulate_rtl({"arg0": x})
+                        sv_text = d.emit_verilog()
+                    except Exception as exc:   # keep filling the matrix
+                        failures.append(
+                            f"{name} f{factor} share={share} o{opt}: {exc}")
+                        records.append({"design": name, "banks": factor,
+                                        "share": share, "opt_level": opt,
+                                        "error": str(exc)})
+                        emit(f"calyx_{name}_f{factor}_"
+                             f"{'shared' if share else 'unshared'}_o{opt}",
+                             (time.perf_counter() - t0) * 1e6,
+                             f"ERROR {type(exc).__name__}")
+                        continue
+                    wall_us = (time.perf_counter() - t0) * 1e6
+                    oracle = d.run_oracle({"arg0": x})
+                    err = max(float(np.max(np.abs(s - o)))
+                              for s, o in zip(outs, oracle))
+                    rtl_bitexact = all(np.array_equal(a, b)
+                                       for a, b in zip(rtl_outs, outs))
+                    lint_errors = verilog.lint(sv_text)
+                    est = d.estimate
+                    netlist = d.to_rtl().stats()
+                    pipelined = d.component.meta.get("pipelined") or []
+                    rec = {
+                        "design": name,
+                        "banks": factor,
+                        "share": share,
+                        "opt_level": opt,
+                        "cycles": est.cycles,
+                        "sim_cycles": stats.cycles,
+                        "rtl_cycles": rtl_stats.cycles,
+                        "cycles_match": stats.cycles == est.cycles
+                                        == rtl_stats.cycles,
+                        "rtl_bitexact": rtl_bitexact,
+                        "oracle_max_abs_err": err,
+                        "banking_efficiency": est.banking_efficiency,
+                        "ii": max((p["ii"] for p in pipelined), default=0),
+                        "pipelined_loops": len(pipelined),
+                        "LUT": est.resources["LUT"],
+                        "FF": est.resources["FF"],
+                        "DSP": est.resources["DSP"],
+                        "BRAM": est.resources["BRAM"],
+                        "fsm_states": est.fsm_states,
+                        "fmax_mhz": est.fmax_mhz,
+                        "wall_us": est.wall_us,
+                        "cells": len(d.component.cells),
+                        "groups": len(d.component.groups),
+                        "netlist": netlist,
+                        "sv_modules": sum(
+                            1 for ln in sv_text.splitlines()
+                            if ln.startswith("module ")),
+                        "sv_loc": len(sv_text.splitlines()),
+                        "sv_lint_errors": len(lint_errors),
+                        "sim": stats.as_dict(),
+                        "rtl_sim": rtl_stats.as_dict(),
+                    }
+                    records.append(rec)
+                    by_point.setdefault((name, factor, share), {})[opt] = \
+                        est.cycles
+                    tag = "shared" if share else "unshared"
+                    emit(f"calyx_{name}_f{factor}_{tag}_o{opt}", wall_us,
+                         f"cycles={est.cycles}|sim={stats.cycles}"
+                         f"|rtl={rtl_stats.cycles}|ii={rec['ii']}"
+                         f"|err={err:.1e}")
+                    if stats.cycles != est.cycles:
+                        failures.append(
+                            f"{name} f{factor} share={share} o{opt}: "
+                            f"simulated {stats.cycles} cycles but "
+                            f"estimated {est.cycles}")
+                    if rtl_stats.cycles != est.cycles:
+                        failures.append(
+                            f"{name} f{factor} share={share} o{opt}: RTL "
+                            f"measured {rtl_stats.cycles} cycles but "
+                            f"estimated {est.cycles}")
+                    if not rtl_bitexact:
+                        failures.append(
+                            f"{name} f{factor} share={share} o{opt}: RTL "
+                            f"outputs diverge bit-wise from the Calyx "
+                            f"simulation")
+                    if lint_errors:
+                        failures.append(
+                            f"{name} f{factor} share={share} o{opt}: "
+                            f"emitted Verilog has {len(lint_errors)} lint "
+                            f"violations (first: {lint_errors[0]})")
+                    if err > ORACLE_TOL:
+                        failures.append(
+                            f"{name} f{factor} share={share} o{opt}: "
+                            f"oracle error {err:.2e} exceeds {ORACLE_TOL}")
+    # opt_level ablation summary: geomean 0 -> 2 speedup over the matrix
+    ratios = [c[0] / c[2] for c in by_point.values()
+              if 0 in c and 2 in c and c[2] > 0]
+    geomean = (math.exp(sum(math.log(r) for r in ratios) / len(ratios))
+               if ratios else 0.0)
+    emit("calyx_opt_geomean_speedup", 0.0,
+         f"{geomean:.2f}x over {len(ratios)} points (opt 0 -> 2)")
     # Write the JSON before failing: on a divergence the artifact with the
     # full per-design matrix (cycles_match=false rows) is the diagnostic.
     out_path = out_path or os.environ.get("CALYX_BENCH_OUT",
                                           "BENCH_calyx.json")
     with open(out_path, "w") as f:
-        json.dump({"schema": 2,
+        json.dump({"schema": 3,
                    "generator": "benchmarks/calyx_bench.py",
+                   "opt_geomean_speedup": round(geomean, 3),
                    "records": records}, f, indent=2)
         f.write("\n")
     emit("calyx_bench_json", 0.0, f"{len(records)} records -> {out_path}")

@@ -16,6 +16,20 @@ lists the pool cells it drives (``group st_12<5> uses shared_fp_add_0``).
         --factor 2 --simulate        # execute the component cycle-accurately
     PYTHONPATH=src python examples/compile_to_calyx.py --model ffnn \
         --factor 2 --emit-verilog /tmp/ffnn_f2.sv --simulate-rtl
+    PYTHONPATH=src python examples/compile_to_calyx.py --model ffnn \
+        --factor 2 --opt-level 2 --simulate   # chaining + loop pipelining
+
+``--opt-level`` selects the static scheduling layer: 0 = the paper's
+schedule (one group per statement), 1 = operation chaining / group fusion
+(seq runs and port-compatible par arms merge into multi-op groups), 2 =
+level 1 plus loop pipelining — innermost single-group repeats get an
+initiation interval II = max(loop-carried register recurrence,
+iterative-unit reservation, memory-port modulo reservation), computed
+from the group's stamped micro-op offsets; e.g. a MAC reduction whose
+accumulator is consumed by the adder at cycle 4 and latched at cycle 6
+pipelines at II = 2.  Pipelined loops print as ``repeat N pipeline
+ii=K`` in the emitted text, and the estimate/simulators all price the
+same overlapped schedule.
 
 ``--simulate`` runs the cycle-accurate simulator (``repro.core.sim``) on a
 random input: it executes the lowered component's micro-ops, measures the
@@ -46,6 +60,9 @@ def main():
     ap.add_argument("--model", choices=list(MODELS), default="ffnn")
     ap.add_argument("--factor", type=int, default=2, choices=(1, 2, 4))
     ap.add_argument("--mode", choices=("layout", "branchy"), default="layout")
+    ap.add_argument("--opt-level", type=int, default=0, choices=(0, 1, 2),
+                    help="static scheduling layer: 0=paper schedule, "
+                         "1=chaining/group fusion, 2=+loop pipelining (II)")
     ap.add_argument("--no-share", action="store_true",
                     help="skip the binding pass (paper's unshared designs)")
     ap.add_argument("--simulate", action="store_true",
@@ -64,17 +81,24 @@ def main():
     d = pipeline.compile_model(builder(), [shape], factor=args.factor,
                                mode=args.mode,
                                check_hazards=args.mode == "layout",
-                               share=not args.no_share)
+                               share=not args.no_share,
+                               opt_level=args.opt_level)
     text = d.calyx_text()
     out = args.out or f"/tmp/{args.model}_f{args.factor}_{args.mode}.futil"
     with open(out, "w") as f:
         f.write(text)
     e = d.estimate
     print(f"model={args.model} factor={args.factor} mode={args.mode} "
-          f"share={not args.no_share}")
+          f"share={not args.no_share} opt_level={args.opt_level}")
     print(f"  cycles={e.cycles}  fmax={e.fmax_mhz}MHz  wall={e.wall_us}us")
-    print(f"  resources={e.resources}  fsm_states={e.fsm_states}")
+    print(f"  resources={e.resources}  fsm_states={e.fsm_states}  "
+          f"banking_efficiency={e.banking_efficiency}")
     print(f"  cells={len(d.component.cells)}  groups={len(d.component.groups)}")
+    pipelined = d.component.meta.get("pipelined") or []
+    if pipelined:
+        loops = " ".join(f"{p['var']}[x{p['extent']} ii={p['ii']} "
+                         f"body={p['body_latency']}]" for p in pipelined)
+        print(f"  pipelined loops: {loops}")
     if d.sharing is not None:
         print(f"  {d.sharing.summary()}")
     print(f"  wrote {len(text.splitlines())} lines -> {out}")

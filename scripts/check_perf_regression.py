@@ -1,0 +1,82 @@
+"""Perf-regression gate over BENCH_calyx.json.
+
+Compares a freshly generated benchmark file against the committed
+baseline and fails (exit 1) if any matching point's cycle count exceeds
+the baseline by more than the tolerance (default 2%).  Points are
+matched on (design, banks, share, opt_level); a schema-2 baseline (which
+predates the scheduling layer) is read as opt_level 0.  Points present
+only on one side are reported but never fail the gate — new designs and
+a trimmed CI matrix are both expected.
+
+    PYTHONPATH=src python scripts/check_perf_regression.py \
+        --baseline BENCH_calyx.json --new /tmp/bench_new.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, Tuple
+
+Key = Tuple[str, int, bool, int]
+
+
+def load(path: str) -> Tuple[int, Dict[Key, int]]:
+    with open(path) as f:
+        data = json.load(f)
+    schema = data.get("schema", 0)
+    rows: Dict[Key, int] = {}
+    for rec in data.get("records", []):
+        if "error" in rec or "cycles" not in rec:
+            continue
+        key = (rec["design"], int(rec["banks"]), bool(rec["share"]),
+               int(rec.get("opt_level", 0)))
+        rows[key] = int(rec["cycles"])
+    return schema, rows
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True,
+                    help="committed BENCH_calyx.json")
+    ap.add_argument("--new", required=True,
+                    help="freshly generated benchmark JSON")
+    ap.add_argument("--tolerance", type=float, default=0.02,
+                    help="allowed relative cycle growth (default 2%%)")
+    args = ap.parse_args()
+
+    _, base = load(args.baseline)
+    _, new = load(args.new)
+    regressions = []
+    improved = 0
+    for key, cycles in sorted(new.items()):
+        if key not in base:
+            print(f"  new point (no baseline): {key} -> {cycles} cycles")
+            continue
+        ref = base[key]
+        delta = (cycles - ref) / ref if ref else 0.0
+        tag = "ok"
+        if cycles > ref * (1.0 + args.tolerance):
+            regressions.append((key, ref, cycles, delta))
+            tag = "REGRESSION"
+        elif cycles < ref:
+            improved += 1
+            tag = "improved"
+        print(f"  {key}: {ref} -> {cycles} cycles ({delta:+.1%}) {tag}")
+    missing = sorted(set(base) - set(new))
+    if missing:
+        print(f"  ({len(missing)} baseline points not regenerated — "
+              f"trimmed matrix)")
+    if regressions:
+        print(f"\nFAIL: {len(regressions)} point(s) regressed beyond "
+              f"{args.tolerance:.0%}:")
+        for key, ref, cycles, delta in regressions:
+            print(f"  {key}: {ref} -> {cycles} ({delta:+.1%})")
+        return 1
+    print(f"\nOK: no cycle regressions beyond {args.tolerance:.0%} "
+          f"({improved} improved, {len(new)} points checked)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -6,6 +6,8 @@
   schedule  : par materialization + par/seq restructuring
   banking   : cyclic memory partitioning (layout-embedded vs branchy)
   calyx     : structural hardware IR    (CIRCT -> Calyx)
+  chaining  : operation chaining / group fusion      (opt_level >= 1)
+  pipelining: loop pipelining with static IIs        (opt_level >= 2)
   sharing   : resource binding onto shared functional-unit pools
   estimator : cycles / resources / timing
   rtl       : Calyx -> FSM + datapath netlist (structural RTL)

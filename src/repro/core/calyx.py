@@ -53,10 +53,17 @@ class Cell:
 @dataclasses.dataclass
 class PortAccess:
     mem: str
-    bank: Optional[int]       # None = runtime-selected bank (branchy mode)
+    bank: Optional[int]       # None = runtime-selected bank
     key: Optional[tuple]      # structural address key; None = never shareable
     free_vars: frozenset      # loop vars the address depends on
     is_store: bool
+    # Symbolic bank index for runtime-selected banks (layout mode where the
+    # cyclic fold did not reach a constant).  The conflict model proves two
+    # such accesses land on distinct physical banks when the per-digit
+    # difference is a nonzero constant modulo the banking factor — the
+    # "bank-affine" par analysis.  None when the bank is constant or the
+    # expression depends on loop vars bound inside the subtree under test.
+    bank_expr: Optional[AExpr] = None
 
 
 @dataclasses.dataclass
@@ -97,6 +104,13 @@ class CRepeat(CNode):
     extent: int
     body: CNode
     var: str = ""
+    # Initiation interval set by the pipelining pass (core.pipelining).
+    # 0 = not pipelined (iterations run back to back with the per-iteration
+    # overhead); ii > 0 = a new iteration launches every ``ii`` cycles and
+    # iterations overlap:  cycles = setup + (extent-1)*ii + body_latency.
+    # The estimator, the Calyx simulator, the RTL lowering, and the RTL
+    # simulator all price/execute exactly this overlapped schedule.
+    ii: int = 0
 
 
 @dataclasses.dataclass
@@ -200,7 +214,8 @@ class _Lower:
             a, ta = self.vexpr(e.a, cells, ports, uops, off)
             b, tb = self.vexpr(e.b, cells, ports, uops, off)
             t = self.tmp()
-            uops.append(D.UAlu(t, e.op, ta, tb, cell=cname))
+            uops.append(D.UAlu(t, e.op, ta, tb, cell=cname,
+                               off=off + max(a, b)))
             return F.FLOAT_COSTS[kind].cycles + max(a, b), t
         if isinstance(e, Un):
             kind = {"exp": "fp_exp", "relu": "fp_relu", "neg": "fp_neg"}[e.op]
@@ -208,7 +223,7 @@ class _Lower:
             cells.append(cname)
             a, ta = self.vexpr(e.a, cells, ports, uops, off)
             t = self.tmp()
-            uops.append(D.UAlu(t, e.op, ta, None, cell=cname))
+            uops.append(D.UAlu(t, e.op, ta, None, cell=cname, off=off + a))
             return F.FLOAT_COSTS[kind].cycles + a, t
         if isinstance(e, SelectC):
             cells.append(self.add_cell("mux"))
@@ -217,7 +232,8 @@ class _Lower:
             a, ta = self.vexpr(e.a, cells, ports, uops, off)
             b, tb = self.vexpr(e.b, cells, ports, uops, off)
             t = self.tmp()
-            uops.append(D.USelect(t, e.cond, ta, tb))
+            uops.append(D.USelect(t, e.cond, ta, tb,
+                                  off=off + cond_cyc + max(a, b)))
             return F.IF_SELECT_CYCLES + cond_cyc + max(a, b), t
         raise TypeError(e)
 
@@ -237,12 +253,16 @@ class _Lower:
         free = set()
         for ke in key_exprs:
             free |= ke.free_vars()
+        bank_expr = None
         if decl.banks and not idxs[0].is_const():
-            key = None  # runtime bank: never shareable
+            # runtime-selected bank: keep the intra-bank address key *and*
+            # the symbolic bank expression so the conflict model can still
+            # prove distinct-bank / same-bank facts (bank-affine par)
+            bank_expr = idxs[0]
             free |= idxs[0].free_vars()
-        else:
-            key = tuple(ke.key() for ke in key_exprs)
-        ports.append(PortAccess(mem, bank, key, frozenset(free), is_store))
+        key = tuple(ke.key() for ke in key_exprs)
+        ports.append(PortAccess(mem, bank, key, frozenset(free), is_store,
+                                bank_expr=bank_expr))
         return cyc
 
     # -- statements -------------------------------------------------------------
@@ -267,7 +287,7 @@ class _Lower:
             self.add_cell("reg32", name=f"reg_{s.name}")
             cells.append(f"reg_{s.name}")
             vlat, t = self.vexpr(s.value, cells, ports, uops, 0)
-            uops.append(D.URegWrite(s.name, t))
+            uops.append(D.URegWrite(s.name, t, off=vlat))
             lat = max(1, vlat)
             g = self.fresh("sr_")
             self.groups[g] = Group(g, lat, cells, ports, uops)
@@ -306,8 +326,13 @@ class _Lower:
             else:
                 self.add_cell("mem_bank", words=decl.size, name=f"mem_{name}")
         control = self.block(self.prog.body)
+        meta = dict(self.prog.meta)
+        # banking factors per logical memory — the conflict model and the
+        # scheduling passes consult these for bank-affinity proofs
+        meta["bank_factors"] = {name: tuple(decl.banks)
+                                for name, decl in self.prog.mems.items()}
         comp = Component(self.prog.name, self.cells, self.groups, control,
-                         meta=dict(self.prog.meta))
+                         meta=meta)
         return comp
 
 
@@ -354,7 +379,9 @@ def emit_text(comp: Component) -> str:
                 emit(ch, ind + 1)
             out.append(f"{pad}}}")
         elif isinstance(node, CRepeat):
-            out.append(f"{pad}repeat {node.extent} /* {node.var} */ {{")
+            pipe = f" pipeline ii={node.ii}" if node.ii else ""
+            out.append(f"{pad}repeat {node.extent}{pipe} "
+                       f"/* {node.var} */ {{")
             emit(node.body, ind + 1)
             out.append(f"{pad}}}")
         elif isinstance(node, CIf):

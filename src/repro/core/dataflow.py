@@ -15,6 +15,10 @@ that occupy a memory port carry the cycle *offset* (within the group's
 activation window) at which the port is busy, consistent with the latency
 arithmetic of the lowering — the hook the simulator uses to enforce
 Calyx's one-access-per-cycle memory constraint at per-cycle granularity.
+ALU, select, and register-write micro-ops likewise carry the offset at
+which they fire: the scheduling layer (``core.pipelining``) reads those
+stamps to derive loop-carried recurrence constraints when computing a
+pipelined loop's initiation interval.
 
 ``UAlu.cell`` names the functional unit that performs the operation.  When
 the binding pass (``sharing.share_cells``) rebinds units onto shared pools
@@ -64,6 +68,7 @@ class UAlu(UOp):
     b: Optional[int]          # None for unary ops
     cell: str                 # functional unit (pool name after binding)
     orig_cell: str = ""       # pre-binding cell name (set by sharing)
+    off: int = 0              # cycle offset at which the unit starts
 
 
 @dataclasses.dataclass
@@ -72,12 +77,14 @@ class USelect(UOp):
     cond: Cond
     a: int
     b: int
+    off: int = 0              # cycle offset at which the mux selects
 
 
 @dataclasses.dataclass
 class URegWrite(UOp):
     reg: str
     src: int
+    off: int = 0              # cycle offset at which the register latches
 
 
 @dataclasses.dataclass

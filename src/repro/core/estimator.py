@@ -36,8 +36,15 @@ import math
 from typing import Dict, List, Optional, Set, Tuple
 
 from . import float_lib as F
+from .affine import AExpr, ModAtom
 from .calyx import (CIf, CNode, CPar, CRepeat, CSeq, Component, GEnable,
                     PortAccess)
+
+
+class BankingEfficiencyWarning(UserWarning):
+    """A ``par`` block's arms conflict-serialize on memory banks — the
+    banking factor bought hardware but not cycles (e.g. the conv2d
+    banks=4 regression this warning was introduced to surface)."""
 
 
 # ---------------------------------------------------------------------------
@@ -52,8 +59,11 @@ def _collect_ports(comp: Component, node: CNode,
     out: List[PortAccess] = []
     if isinstance(node, GEnable):
         for p in comp.groups[node.group].ports:
-            if p.key is not None and p.free_vars & bound:
-                out.append(dataclasses.replace(p, key=None))
+            if p.free_vars & bound:
+                # the address depends on a loop var bound inside this
+                # subtree: neither the broadcast key nor the bank-affinity
+                # proof may assume a common environment
+                out.append(dataclasses.replace(p, key=None, bank_expr=None))
             else:
                 out.append(p)
     elif isinstance(node, CSeq) or isinstance(node, CPar):
@@ -67,18 +77,71 @@ def _collect_ports(comp: Component, node: CNode,
     return out
 
 
+def banks_provably_distinct(a: PortAccess, b: PortAccess) -> bool:
+    """True iff the two accesses provably hit different physical banks.
+
+    Constant banks compare directly.  Runtime-selected banks (layout mode
+    where the cyclic fold did not reach a constant, e.g. ``(2*i + a) % 4``
+    after strip-mining by a factor that does not divide the banking
+    factor) are compared *digit-wise*: the bank index is a mixed-radix
+    sum of ``(expr_d mod f_d) * stride_d`` digits, and two digit vectors
+    provably differ when
+
+    * the whole bank-expression difference folds to a nonzero constant
+      (e.g. one digit folded to distinct constants in both arms), or
+    * some matched digit pair ``(e1 mod f)``/``(e2 mod f)`` on the same
+      stride has ``e1 - e2`` a constant not divisible by ``f`` — residues
+      of values a fixed non-multiple-of-``f`` apart always differ.
+
+    This is what lets strip-mined arms whose strides are bank-affine (the
+    unroll offset lands each arm on its own bank) run concurrently even
+    when no digit is a compile-time constant.
+    """
+    if a.bank is not None and b.bank is not None:
+        return a.bank != b.bank
+    ea, eb = a.bank_expr, b.bank_expr
+    if ea is None or eb is None:
+        return False              # one side constant/invalidated: unknown
+    diff = ea - eb
+    if diff.is_const():
+        return diff.const_value() != 0
+    by_coeff = {}
+    for atom, co in eb.coeffs.items():
+        if isinstance(atom, ModAtom):
+            by_coeff.setdefault(co, []).append(atom)
+    for atom, co in ea.coeffs.items():
+        if not isinstance(atom, ModAtom):
+            continue
+        for other in by_coeff.get(co, ()):
+            if other.c != atom.c:
+                continue
+            d = atom.inner - other.inner
+            if d.is_const() and d.const_value() % atom.c != 0:
+                return True       # this digit always differs
+    return False
+
+
 def _arms_conflict(pa: List[PortAccess], pb: List[PortAccess]) -> bool:
     for a in pa:
         for b in pb:
             if a.mem != b.mem:
                 continue
-            if a.bank is not None and b.bank is not None and a.bank != b.bank:
-                continue  # provably different physical banks
+            if banks_provably_distinct(a, b):
+                continue
             if (not a.is_store and not b.is_store
                     and a.key is not None and a.key == b.key):
-                continue  # identical-address loads: broadcast one read
+                # identical intra-bank address: either the banks coincide
+                # (one read port broadcasts to both) or they differ (no
+                # port is contended) — never a conflict for loads
+                continue
             return True
     return False
+
+
+def ports_conflict(pa: List[PortAccess], pb: List[PortAccess]) -> bool:
+    """Public face of the pairwise port-conflict test — used by the
+    chaining pass to decide which ``par`` arms may fuse into one group."""
+    return _arms_conflict(pa, pb)
 
 
 def par_conflict_components(comp: Component, node: CPar) -> List[List[int]]:
@@ -117,6 +180,49 @@ def par_join_cycles(n_arms: int) -> int:
     return F.PAR_JOIN_CYCLES + max(0, math.ceil(math.log2(max(n_arms, 1))))
 
 
+def par_serializations(comp: Component) -> List[Tuple[CPar, int, int]]:
+    """Every ``par`` whose conflict partition collapses arms.
+
+    Returns ``(node, n_arms, n_components)`` for each multi-arm par where
+    ``n_components < n_arms`` — i.e. some arms the schedule *placed* in
+    parallel will run sequentially on the hardware because they contend
+    for a single-ported bank.  Compile-time visibility for regressions
+    like conv2d banks=4, without running a benchmark.
+    """
+    out: List[Tuple[CPar, int, int]] = []
+
+    def walk(node: CNode) -> None:
+        if isinstance(node, (CSeq, CPar)):
+            if isinstance(node, CPar) and len(node.children) > 1:
+                comps = par_conflict_components(comp, node)
+                if len(comps) < len(node.children):
+                    out.append((node, len(node.children), len(comps)))
+            for ch in node.children:
+                walk(ch)
+        elif isinstance(node, CRepeat):
+            walk(node.body)
+        elif isinstance(node, CIf):
+            walk(node.then)
+            walk(node.els)
+
+    walk(comp.control)
+    return out
+
+
+def banking_efficiency(comp: Component) -> float:
+    """Worst-case concurrency retention across all ``par`` blocks.
+
+    1.0 = every par's arms run fully concurrently; ``k/n`` = the worst
+    par keeps only ``k`` of its ``n`` arms concurrent (its conflict
+    partition has ``k`` components).  Exposed on ``Estimate`` and warned
+    about at compile time so banked-but-serialized designs are visible.
+    """
+    worst = 1.0
+    for _, n_arms, n_comps in par_serializations(comp):
+        worst = min(worst, n_comps / n_arms)
+    return worst
+
+
 # ---------------------------------------------------------------------------
 # Cycles
 # ---------------------------------------------------------------------------
@@ -130,6 +236,10 @@ def cycles(comp: Component, node: Optional[CNode] = None) -> int:
         return sum(cycles(comp, ch) for ch in node.children)
     if isinstance(node, CRepeat):
         body = cycles(comp, node.body)
+        if node.ii and node.extent > 0:
+            # pipelined loop: a new iteration launches every ii cycles and
+            # the last one drains its full body latency (core.pipelining)
+            return F.LOOP_SETUP_CYCLES + (node.extent - 1) * node.ii + body
         return F.LOOP_SETUP_CYCLES + node.extent * (body + F.LOOP_ITER_OVERHEAD)
     if isinstance(node, CIf):
         t = cycles(comp, node.then)
@@ -242,6 +352,7 @@ class Estimate:
     period_ns: float
     fmax_mhz: float
     wall_us: float
+    banking_efficiency: float = 1.0   # worst par concurrency retention
 
     def as_dict(self):
         return dataclasses.asdict(self)
@@ -260,4 +371,5 @@ def estimate(comp: Component) -> Estimate:
         period_ns=round(period, 3),
         fmax_mhz=round(1000.0 / period, 1),
         wall_us=round(cyc * period / 1000.0, 3),
+        banking_efficiency=round(banking_efficiency(comp), 4),
     )

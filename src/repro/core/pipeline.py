@@ -9,10 +9,22 @@ paper leaves to future work:
     banking.apply_banking                (cyclic partitioning)
     banking.check_par_hazards            (static safety analysis)
     calyx.lower_program                  (CIRCT -> Calyx)
+    chaining.chain_component             (opt_level>=1: group fusion)
+    pipelining.pipeline_loops            (opt_level>=2: loop pipelining, II)
     sharing.share_cells                  (resource binding; ``share=True``)
     estimator.estimate                   (Calyx -> cost report)
     rtl.lower_component                  (Calyx -> FSM+datapath netlist)
     verilog.emit                         (netlist -> SystemVerilog)
+
+The scheduling layer (``opt_level=0/1/2``) sits between lowering and
+binding: level 1 fuses seq runs and port-compatible par arms into
+multi-op groups (cycle-neutral along seq; removes fork/join handshakes
+and most FSM states), level 2 additionally pipelines innermost
+single-group repeats with a statically computed initiation interval, so
+``cycles = setup + (extent-1)*II + body`` replaces
+``setup + extent*(body+overhead)``.  Designs whose par arms still
+conflict-serialize get a ``BankingEfficiencyWarning`` and report
+``estimate.banking_efficiency < 1``.
 
 The sharing stage rebinds expensive functional units of mutually exclusive
 groups onto shared pools; it provably cannot change ``estimate.cycles``
@@ -41,11 +53,13 @@ matrix in ``tests/test_core_rtl.py`` / ``tests/test_core_sim.py``.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from . import affine, banking, calyx, estimator, frontend, schedule, sharing
+from . import affine, banking, calyx, chaining, estimator, frontend
+from . import pipelining, schedule, sharing
 from . import rtl as rtl_ir
 from . import rtl_sim
 from . import sim as calyx_sim
@@ -63,6 +77,7 @@ class CompiledDesign:
     hazards: List[str]
     spec: banking.BankingSpec
     sharing: Optional[sharing.SharingReport] = None
+    opt_level: int = 0               # scheduling level the design was built at
     _netlist: Optional[rtl_ir.Netlist] = dataclasses.field(
         default=None, repr=False, compare=False)
 
@@ -167,7 +182,29 @@ class CompiledDesign:
 def compile_graph(graph: T.Graph, factor: int = 1, mode: str = "layout",
                   restructure: bool = True,
                   check_hazards: bool = True,
-                  share: bool = True) -> CompiledDesign:
+                  share: bool = True,
+                  opt_level: int = 0) -> CompiledDesign:
+    """Compile a tensor graph to a Calyx component + estimate.
+
+    ``opt_level`` selects the static scheduling layer between lowering
+    and binding/estimation:
+
+    * ``0`` — the paper's schedule: one group per statement, loops pay a
+      per-iteration overhead, ``par`` pays a fork/join per activation.
+    * ``1`` — operation chaining / group fusion (``core.chaining``):
+      seq runs and port-compatible par arms fuse into multi-op groups;
+      FSM states, go/done fabric, and join handshakes collapse.
+    * ``2`` — level 1 plus loop pipelining (``core.pipelining``):
+      innermost single-group repeats get an initiation interval from
+      memory-port, non-pipelined-unit, and loop-carried register
+      constraints, and iterations overlap.
+
+    Every level preserves the end-to-end invariant: estimator cycles ==
+    Calyx-sim cycles == RTL-sim cycles exactly, and outputs bit-equal to
+    the affine interpreter.
+    """
+    if opt_level not in (0, 1, 2):
+        raise ValueError(f"opt_level must be 0, 1, or 2 (got {opt_level})")
     prog = affine.lower_graph(graph)
     if factor > 1:
         prog = schedule.parallelize(prog, factor)
@@ -181,6 +218,10 @@ def compile_graph(graph: T.Graph, factor: int = 1, mode: str = "layout",
         hazards = banking.check_par_hazards(
             prog, raise_on_conflict=(check_hazards and mode == "layout"))
     comp = calyx.lower_program(prog)
+    if opt_level >= 1:
+        comp = chaining.chain_component(comp)
+    if opt_level >= 2:
+        comp = pipelining.pipeline_loops(comp)
     report = None
     pre_cycles = None
     if share:
@@ -193,16 +234,27 @@ def compile_graph(graph: T.Graph, factor: int = 1, mode: str = "layout",
             f"resource sharing changed the schedule "
             f"({pre_cycles} -> {est.cycles} cycles) — binding must "
             f"be latency-neutral")
+    if est.banking_efficiency < 1.0:
+        serial = estimator.par_serializations(comp)
+        detail = "; ".join(f"{n} arms -> {k} concurrent"
+                           for _, n, k in serial[:4])
+        warnings.warn(
+            f"design {graph.name!r} (factor={factor}, mode={mode}, "
+            f"opt_level={opt_level}): {len(serial)} par block(s) "
+            f"conflict-serialize on memory banks ({detail}) — banking "
+            f"efficiency {est.banking_efficiency}",
+            estimator.BankingEfficiencyWarning, stacklevel=2)
     return CompiledDesign(graph, prog, comp, est, hazards, spec,
-                          sharing=report)
+                          sharing=report, opt_level=opt_level)
 
 
 def compile_model(module: frontend.Module, input_shapes,
                   factor: int = 1, mode: str = "layout",
                   restructure: bool = True, name: str = "main",
                   check_hazards: bool = True,
-                  share: bool = True) -> CompiledDesign:
+                  share: bool = True,
+                  opt_level: int = 0) -> CompiledDesign:
     graph = frontend.trace(module, input_shapes, name=name)
     return compile_graph(graph, factor=factor, mode=mode,
                          restructure=restructure, check_hazards=check_hazards,
-                         share=share)
+                         share=share, opt_level=opt_level)

@@ -209,12 +209,14 @@ class DpSelect(DpOp):
     cond: Cond
     a: int
     b: int
+    off: int = 0              # cycle offset at which the mux selects
 
 
 @dataclasses.dataclass
 class DpRegWrite(DpOp):
     reg: str
     src: int
+    off: int = 0              # cycle offset at which the register latches
 
 
 @dataclasses.dataclass
@@ -250,6 +252,11 @@ class FsmState:
         ``cycles`` cycles, then branch to ``then_state``/``else_state``.
       * ``par``   — fork the child FSMs in ``children``, wait for all
         their dones, then wait ``join_cycles`` for the join reduction.
+      * ``pipe``  — pipelined repeat (``CRepeat.ii > 0``): re-launch the
+        body group every ``ii`` cycles, incrementing the loop index at
+        each launch; the state lasts ``(extent-1)*ii + latency`` cycles
+        (``cycles``) so the last iteration fully drains.  ``pipe`` holds
+        ``(var, extent, ii, body_latency)``.
       * ``done``  — terminal; raises the FSM's done signal.
 
     Entry/exit actions: ``set_idx`` zeroes an index register at entry;
@@ -270,6 +277,7 @@ class FsmState:
     else_state: Optional[int] = None
     children: List[int] = dataclasses.field(default_factory=list)
     join_cycles: int = 0
+    pipe: Optional[Tuple[str, int, int, int]] = None  # var, extent, ii, lat
 
 
 @dataclasses.dataclass
@@ -315,7 +323,7 @@ class Netlist:
         out: Dict[str, int] = {}
         for f in self.fsms:
             for st in f.states:
-                if st.kind == "group":
+                if st.kind in ("group", "pipe"):
                     out[st.group] = f.fid
         return out
 
@@ -390,6 +398,20 @@ class _FsmBuilder:
                              label="setup", set_idx=var)
             if node.extent <= 0:
                 return setup, [(setup, "next")]
+            if node.ii and not isinstance(node.body, GEnable):
+                raise ValueError(
+                    "pipelined repeat body must be a single group "
+                    "(run chaining before pipelining)")
+            if node.ii:
+                # pipelined repeat: one state re-launches the body group
+                # every ii cycles; residence covers the last drain
+                g = comp.groups[node.body.group]
+                total = (node.extent - 1) * node.ii + g.latency
+                ps = self.add("pipe", cycles=total, group=g.name,
+                              label=f"pipe ii={node.ii}",
+                              pipe=(var, node.extent, node.ii, g.latency))
+                self.patch([(setup, "next")], ps)
+                return setup, [(ps, "next")]
             body_e, body_x = self.build(node.body)
             it = self.add("delay", cycles=F.LOOP_ITER_OVERHEAD, label="iter",
                           inc_idx=var)
@@ -496,9 +518,9 @@ class _RtlLower:
                         pooled.append(u.cell)
                 ops.append(DpUnit(u.dst, u.cell, u.op, u.a, u.b, grant))
             elif isinstance(u, D.USelect):
-                ops.append(DpSelect(u.dst, u.cond, u.a, u.b))
+                ops.append(DpSelect(u.dst, u.cond, u.a, u.b, u.off))
             elif isinstance(u, D.URegWrite):
-                ops.append(DpRegWrite(u.reg, u.src))
+                ops.append(DpRegWrite(u.reg, u.src, u.off))
             elif isinstance(u, D.UMemWrite):
                 ops.append(DpMemWrite(u.mem, list(u.idxs), u.src, u.off))
             else:

@@ -100,7 +100,7 @@ class _FsmExec:
     """One live controller instance: state register + down-counter."""
 
     __slots__ = ("sim", "fsm", "scope", "state", "counter", "done", "phase",
-                 "children")
+                 "children", "pipe_launched", "pipe_cd")
 
     def __init__(self, sim: "_RtlSim", fsm: Fsm, parent: Optional[_Scope]):
         self.sim = sim
@@ -111,6 +111,8 @@ class _FsmExec:
         self.done = False
         self.phase = 0                      # par: 0 = run, 1 = join
         self.children: List["_FsmExec"] = []
+        self.pipe_launched = 0              # pipe: iterations launched
+        self.pipe_cd = 0                    # pipe: cycles to next launch
 
     # -- state entry ---------------------------------------------------------
     def activate(self, at_cycle: int) -> None:
@@ -139,6 +141,15 @@ class _FsmExec:
                 self.phase = 1
                 self.counter = st.join_cycles
             return
+        if st.kind == "pipe":
+            # pipelined repeat: launch iteration 0 now (the setup state
+            # zeroed the index), then one more every ii cycles in tick()
+            self.sim.pipe_depth += 1
+            self.sim.fire_group(st.group, at_cycle, self.scope)
+            self.pipe_launched = 1
+            self.pipe_cd = st.pipe[2]
+            self.counter = st.cycles
+            return
         if st.kind == "group":
             self.sim.fire_group(st.group, at_cycle, self.scope)
         self.counter = st.cycles
@@ -159,6 +170,20 @@ class _FsmExec:
                 return
             self.counter -= 1
             if self.counter <= 0:
+                self._enter(self.fsm.states[st.next], cycle + 1)
+            return
+        if st.kind == "pipe":
+            var, extent, ii, _lat = st.pipe
+            self.counter -= 1
+            if self.pipe_launched < extent:
+                self.pipe_cd -= 1
+                if self.pipe_cd <= 0:
+                    self.scope.vars[var] = self.pipe_launched
+                    self.sim.fire_group(st.group, cycle + 1, self.scope)
+                    self.pipe_launched += 1
+                    self.pipe_cd = ii
+            if self.counter <= 0:
+                self.sim.pipe_exit()
                 self._enter(self.fsm.states[st.next], cycle + 1)
             return
         self.counter -= 1
@@ -186,6 +211,7 @@ class _RtlSim:
         self.banks: Dict[str, np.ndarray] = {}     # flat f64 word arrays
         self.regs: Dict[str, float] = {}
         self.par_depth = 0
+        self.pipe_depth = 0                        # live pipelined loops
         # (bank, cycle) -> (is_store, full address tuple)
         self._ports: Dict[Tuple[str, int], Tuple[bool, tuple]] = {}
         # (unit, cycle) -> owning group
@@ -274,13 +300,21 @@ class _RtlSim:
         by the widest concurrent window, not the whole run (mirrors the
         Calyx simulator's post-par port-table clear)."""
         self.par_depth -= 1
-        if self.par_depth == 0:
+        if self.par_depth == 0 and self.pipe_depth == 0:
+            self._ports.clear()
+            self._unit_owner.clear()
+
+    def pipe_exit(self) -> None:
+        """A pipelined loop drained its last iteration — same bounding
+        rule as :meth:`par_exit`."""
+        self.pipe_depth -= 1
+        if self.par_depth == 0 and self.pipe_depth == 0:
             self._ports.clear()
             self._unit_owner.clear()
 
     # -- datapath execution ----------------------------------------------------
     def fire_group(self, gname: str, start: int, env: _Scope) -> None:
-        if self.par_depth == 0:
+        if self.par_depth == 0 and self.pipe_depth == 0:
             # sequential flow: all stamped windows are strictly past
             self._ports.clear()
             self._unit_owner.clear()

@@ -93,9 +93,44 @@ def assigned_regs(stmts: List[Stmt]) -> List[str]:
 # ---------------------------------------------------------------------------
 
 
-def _gcd_factor(extent: int, factor: int) -> int:
-    import math
-    return math.gcd(extent, factor)
+def strip_count(extent: int, factor: int) -> int:
+    """Bank-affine strip factor: how many arms to unroll a loop into.
+
+    The arm count must divide ``extent`` (arms stay balanced) and must not
+    exceed ``factor`` (the banking factor — more arms than banks can never
+    all hit distinct banks).  Among the candidates we prefer divisors of
+    ``factor``: with ``c | factor`` the unroll offsets ``0..c-1`` keep the
+    *combined* offset span of nested strip-mines within one bank period,
+    so every arm's accesses provably land on distinct banks (either the
+    cyclic fold reaches a constant digit, or the bank-affine difference
+    proof in ``estimator.banks_provably_distinct`` closes it).  When no
+    nontrivial divisor of ``factor`` divides ``extent`` (e.g. extent 3,
+    factor 4) we fall back to the largest divisor of ``extent`` itself —
+    arms then span ``c <= factor`` consecutive offsets, still pairwise
+    distinct modulo the banking factor.
+
+    ``gcd(extent, factor)`` — the previous policy — is always a
+    candidate, but it is not always the best one: gcd(6, 4) = 2 wastes
+    half the banks where 3 arms are provably conflict-free.
+    """
+    best = 1
+    for c in range(2, min(extent, factor) + 1):
+        if extent % c:
+            continue
+        if factor % c == 0:
+            best = max(best, c)
+    if best == 1 and extent >= factor:
+        # No divisor of the factor divides the extent: fall back to the
+        # largest divisor of the extent itself (e.g. extent 6, factor 4
+        # -> 3 arms at offsets {0,1,2}, pairwise distinct mod 4).  Only
+        # when the extent covers the factor — stripping a short loop
+        # (extent < factor) adds arms without adding distinct banks and
+        # its offsets stack onto sibling strips until they wrap the bank
+        # period, conflict-serializing the combined par.
+        for c in range(2, min(extent, factor) + 1):
+            if extent % c == 0:
+                best = max(best, c)
+    return best
 
 
 def _is_simple_reduce(loop: Loop) -> bool:
@@ -109,8 +144,13 @@ def _is_simple_reduce(loop: Loop) -> bool:
 
 
 def strip_mine_par(loop: Loop, factor: int) -> List[Stmt]:
-    """Loop(j,N) -> Loop(j_o, N/c){ Par[ body[j := c*j_o + a] ] }."""
-    c = _gcd_factor(loop.extent, factor)
+    """Loop(j,N) -> Loop(j_o, N/c){ Par[ body[j := c*j_o + a] ] }.
+
+    ``c`` is the bank-affine :func:`strip_count` — chosen so the unroll
+    arms' address strides provably land on distinct banks of a
+    factor-``factor`` cyclic partitioning (``banking.BankingSpec``).
+    """
+    c = strip_count(loop.extent, factor)
     if c <= 1:
         return [loop]
     outer = loop.var + "_o"
@@ -132,7 +172,7 @@ def strip_mine_reduce(loop: Loop, factor: int) -> List[Stmt]:
         for k_o: par { acc_a = acc_a + f(c*k_o + a) }
         acc = acc + acc_0 + ... + acc_{c-1}     (sequential combine)
     """
-    c = _gcd_factor(loop.extent, factor)
+    c = strip_count(loop.extent, factor)
     if c <= 1 or not _is_simple_reduce(loop):
         return [loop]
     s: SetReg = loop.body[0]  # type: ignore[assignment]
@@ -212,17 +252,22 @@ def _is_simple_reduce_shape(loop: Loop) -> bool:
 # ---------------------------------------------------------------------------
 
 
-_RESTRUCT_COUNTER = [0]
-
-
-def restructure_par(par: Par) -> List[Stmt]:
+def restructure_par(par: Par,
+                    _counter: Optional[List[int]] = None) -> List[Stmt]:
     """Hoist shared sequential structure out of parallel arms.
 
     If every arm has the same statement count and position-wise compatible
     structure (equal-extent loops at matching positions), rewrite stepwise:
     ``Par[A1;A2 | B1;B2]`` -> ``Par[A1|B1]; Par[A2|B2]`` and
     ``Par[Loop(e){a} | Loop(e){b}]`` -> ``Loop(e){ Par[a|b] }``.
+
+    ``_counter`` numbers the fused loop variables.  It is *per invocation*
+    (a fresh one is allocated when omitted, and :func:`restructure`
+    threads a single counter through one whole program rewrite): a
+    module-global counter would make repeated compiles in one process
+    emit different ``_fuseN`` names, i.e. non-reproducible text.
     """
+    counter = [0] if _counter is None else _counter
     arms = par.arms
     if len(arms) <= 1:
         return [par]
@@ -235,13 +280,13 @@ def restructure_par(par: Par) -> List[Stmt]:
         if all(isinstance(s, Loop) for s in col):
             loops: List[Loop] = col  # type: ignore[assignment]
             if len({(l.extent,) for l in loops}) == 1:
-                _RESTRUCT_COUNTER[0] += 1
-                var = f"_fuse{_RESTRUCT_COUNTER[0]}"
+                counter[0] += 1
+                var = f"_fuse{counter[0]}"
                 bodies = []
                 for l in loops:
                     env = {l.var: AExpr.var(var)}
                     bodies.append(clone_stmts(l.body, env, {}))
-                inner = restructure_par(Par(bodies))
+                inner = restructure_par(Par(bodies), counter)
                 out.append(Loop(var, loops[0].extent, inner, kind="seq"))
                 continue
         out.append(Par([[s] for s in col]) if len(col) > 1 else col[0])
@@ -252,6 +297,7 @@ def restructure(prog: Program, enable: bool = True) -> Program:
     """Apply the par/seq rewrite everywhere (ablatable via ``enable``)."""
     if not enable:
         return prog
+    counter = [0]                 # per-invocation: reproducible _fuseN names
 
     def rewrite(stmts: List[Stmt]) -> List[Stmt]:
         out: List[Stmt] = []
@@ -260,15 +306,11 @@ def restructure(prog: Program, enable: bool = True) -> Program:
                 out.append(Loop(s.var, s.extent, rewrite(s.body), kind=s.kind))
             elif isinstance(s, Par):
                 arms = [rewrite(a) for a in s.arms]
-                out.extend(rewrite_par_list(restructure_par(Par(arms))))
+                out.extend(restructure_par(Par(arms), counter))
             elif isinstance(s, If):
                 out.append(If(s.cond, rewrite(s.then), rewrite(s.els)))
             else:
                 out.append(s)
         return out
-
-    def rewrite_par_list(stmts: List[Stmt]) -> List[Stmt]:
-        # restructure_par may surface new Loop{Par} nests; leave them as-is
-        return stmts
 
     return dataclasses.replace(prog, body=rewrite(prog.body))

@@ -88,6 +88,7 @@ class _Sim:
         self._env: Dict[str, int] = {}
         self._gstart = 0                       # active group's start cycle
         self._par_depth = 0                    # live par nesting depth
+        self._pipe_depth = 0                   # live pipelined-loop depth
         # (mem, bank, cycle) -> (is_store, address-tuple).  Clashes can only
         # happen between accesses whose windows overlap — i.e. inside one
         # group or under a live par — so the table is cleared whenever the
@@ -170,7 +171,7 @@ class _Sim:
                     f"was built without datapath semantics (re-lower with "
                     f"calyx.lower_program)")
             self.stats.group_activations += 1
-            if self._par_depth == 0:
+            if self._par_depth == 0 and self._pipe_depth == 0:
                 # sequential flow: earlier windows are strictly in the past
                 self._ports.clear()
             self._gstart = start
@@ -184,6 +185,24 @@ class _Sim:
                 t = self.run(ch, t)
             return t
         if isinstance(node, CRepeat):
+            if node.ii and node.extent > 0:
+                # pipelined loop: iteration i launches at setup + i*ii and
+                # its port claims are stamped at those absolute cycles —
+                # overlapped windows coexist in the port table, so an
+                # unsound initiation interval raises SimError instead of
+                # silently mis-simulating the hardware
+                t = start + F.LOOP_SETUP_CYCLES
+                end = t
+                self._pipe_depth += 1
+                for i in range(node.extent):
+                    if node.var:
+                        self._env[node.var] = i
+                    end = max(end, self.run(node.body, t))
+                    t += node.ii
+                self._pipe_depth -= 1
+                if self._par_depth == 0 and self._pipe_depth == 0:
+                    self._ports.clear()    # drained: windows are past
+                return end
             t = start + F.LOOP_SETUP_CYCLES
             for i in range(node.extent):
                 if node.var:
@@ -229,7 +248,7 @@ class _Sim:
             self.stats.serialized_arms += len(members) - 1
             ends.append(t)
         self._par_depth -= 1
-        if self._par_depth == 0:
+        if self._par_depth == 0 and self._pipe_depth == 0:
             self._ports.clear()            # everything stamped is now past
         return max(ends) + estimator.par_join_cycles(len(arms))
 

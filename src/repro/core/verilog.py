@@ -43,6 +43,19 @@ mirroring ``float_lib`` exactly — bit-faithful to the f64 datapath the
 simulators execute, but not themselves synthesizable; swapping the
 cores for HardFloat (as the paper integrates) changes only the
 primitive bodies, not the netlist or the controllers.
+
+Pipelined loops (``FsmState.kind == "pipe"``, produced by
+``core.pipelining``) emit a single controller state with a modulo-II
+launch counter: the loop index increments every II cycles and every
+datapath event guard matches ``(elapsed - offset) % II == 0`` within the
+event's live window, with loop-index references in address expressions
+rewound by ``offset // II`` stages (the index has advanced while the
+access's iteration is still in flight).  Like the FP cores, the
+*cross-stage value forwarding registers* a fully overlapped datapath
+needs (per-stage copies of captured operands when II < body latency) are
+part of the HardFloat-style drop-in: the emitted netlist carries the
+schedule contract — launch cadence, port cadence, index rewind — that
+``rtl_sim`` executes and verifies cycle-exactly.
 """
 from __future__ import annotations
 
@@ -202,6 +215,14 @@ class _Emitter:
         self.lines: List[str] = []
         # group -> owning fsm fid (for index resolution / counters)
         self.group_fid: Dict[str, int] = net.group_fids()
+        # pipelined groups: group -> its `pipe` FsmState (launch cadence)
+        self.pipe_of: Dict[str, object] = {}
+        self.fsm_has_pipe: set = set()
+        for f in net.fsms:
+            for st in f.states:
+                if st.kind == "pipe":
+                    self.pipe_of[st.group] = st
+                    self.fsm_has_pipe.add(f.fid)
         # unit -> users in grant order: (group, a_wire, b_wire)
         self.unit_users: Dict[str, List[Tuple[str, int, Optional[int]]]] = {}
         for blk in net.blocks.values():
@@ -220,6 +241,32 @@ class _Emitter:
 
         def resolve(var: str) -> str:
             return self.net.resolve_index(fid, var).name
+        return resolve
+
+    def resolver_at(self, group: str, off: int) -> "callable":
+        """Index resolver for a datapath event at in-body offset ``off``.
+
+        For a pipelined group the loop index register free-runs (one
+        increment per II) while iterations are still in flight, so an
+        event belonging to iteration j observes the register at value
+        ``j + off // II`` — references to the pipelined loop var are
+        rewound by that stage count.  Other variables (and every
+        non-pipelined group) resolve unchanged.
+        """
+        base = self.resolver(group)
+        st = self.pipe_of.get(group)
+        if st is None:
+            return base
+        var, _extent, ii, _lat = st.pipe
+        rewind = off // ii
+        if rewind == 0:
+            return base
+
+        def resolve(v: str) -> str:
+            name = base(v)
+            if v == var:
+                return f"({name} - 32'sd{rewind})"
+            return name
         return resolve
 
     def wire(self, group: str, n: int) -> str:
@@ -306,6 +353,8 @@ class _Emitter:
         for f in self.net.fsms:
             self.w(f"  logic [31:0] fsm{f.fid}_state;")
             self.w(f"  logic [31:0] fsm{f.fid}_cnt;")
+            if f.fid in self.fsm_has_pipe:
+                self.w(f"  logic [31:0] fsm{f.fid}_pipe_cd;")
         for f in self.net.fsms:
             done_idx = next(s.index for s in f.states if s.kind == "done")
             self.w(f"  wire fsm{f.fid}_done = "
@@ -331,7 +380,7 @@ class _Emitter:
         self.w()
         for f in self.net.fsms:
             for st in f.states:
-                if st.kind == "group":
+                if st.kind in ("group", "pipe"):
                     self.w(f"  wire g_{st.group}_go = (fsm{f.fid}_state == "
                            f"{self.state_lp(f.fid, st.index)});")
 
@@ -405,11 +454,26 @@ class _Emitter:
 
     # .. per-group datapath ......................................................
     def _cnt_cond(self, group: str, off: int) -> str:
-        """Counter match for the cycle `off` of the group's window."""
+        """Counter match for the cycle `off` of the group's window.
+
+        Plain groups match one counter value.  Pipelined groups (enabled
+        from a ``pipe`` state) fire the event once per launched
+        iteration: every II cycles inside the event's live window
+        ``[latency - off, residence - off]`` of the down-counter.
+        """
         fid = self.group_fid[group]
         blk = self.net.blocks[group]
-        k = max(1, blk.latency - off)
-        return f"g_{group}_go && (fsm{fid}_cnt == 32'd{k})"
+        off = min(off, blk.latency - 1)
+        st = self.pipe_of.get(group)
+        if st is None:
+            k = max(1, blk.latency - off)
+            return f"g_{group}_go && (fsm{fid}_cnt == 32'd{k})"
+        _var, _extent, ii, lat = st.pipe
+        hi = st.cycles - off              # iteration 0's event
+        lo = max(1, lat - off)            # iteration extent-1's event
+        return (f"g_{group}_go && (fsm{fid}_cnt <= 32'd{hi})"
+                f" && (fsm{fid}_cnt >= 32'd{lo})"
+                f" && (((32'd{hi} - fsm{fid}_cnt) % 32'd{ii}) == 32'd0)")
 
     def _rdata_mux(self, mem: str, idxs: List[AExpr], resolve) -> str:
         spec = self.net.mems[mem]
@@ -446,51 +510,62 @@ class _Emitter:
                     # not at the address edge (which would latch the
                     # previous read).  A read completing at the group's
                     # last cycle has no later edge inside the window, so
-                    # it aliases rdata combinationally instead.
+                    # it aliases rdata combinationally instead.  Pipelined
+                    # groups re-capture once per launched iteration (the
+                    # modulo-II guard in _cnt_cond).
                     wn = self.wire(blk.group, op.dst)
-                    fid = self.group_fid[blk.group]
                     k = blk.latency - op.off - 1
-                    rdata = self._rdata_mux(op.mem, op.idxs, resolve)
                     if k >= 1:
+                        # the select is evaluated at the *capture* cycle
+                        # (off+1), when a pipelined loop's free-running
+                        # index has possibly advanced a stage past the
+                        # address cycle — rewind for off+1, not off
+                        at = self.resolver_at(blk.group, op.off + 1)
+                        rdata = self._rdata_mux(op.mem, op.idxs, at)
+                        capture = self._cnt_cond(blk.group, op.off + 1)
                         self.w(f"  logic [{DATA_W - 1}:0] {wn};")
                         self.w(f"  always_ff @(posedge clk) begin")
-                        self.w(f"    if (g_{blk.group}_go && "
-                               f"(fsm{fid}_cnt == 32'd{k})) begin")
+                        self.w(f"    if ({capture}) begin")
                         self.w(f"      {wn} <= {rdata};")
                         self.w("    end")
                         self.w("  end")
                     else:
+                        at = self.resolver_at(blk.group, op.off)
+                        rdata = self._rdata_mux(op.mem, op.idxs, at)
                         self.w(f"  wire [{DATA_W - 1}:0] {wn} = {rdata};")
                 elif isinstance(op, DpUnit):
                     self.w(f"  wire [{DATA_W - 1}:0] "
                            f"{self.wire(blk.group, op.dst)} = "
                            f"{op.unit}_y;")
                 elif isinstance(op, DpSelect):
+                    at = self.resolver_at(blk.group, op.off)
                     self.w(f"  wire [{DATA_W - 1}:0] "
                            f"{self.wire(blk.group, op.dst)} = "
-                           f"{_sv_cond(op.cond, resolve)} ? "
+                           f"{_sv_cond(op.cond, at)} ? "
                            f"{self.wire(blk.group, op.a)} : "
                            f"{self.wire(blk.group, op.b)};")
                 # reg/mem writes are emitted by the dedicated muxes below
 
     def _emit_reg_writes(self) -> None:
         # collect writers per register, in block order
-        writers: Dict[str, List[Tuple[str, int]]] = {}
+        writers: Dict[str, List[Tuple[str, int, int]]] = {}
         for blk in self.net.blocks.values():
             for op in blk.ops:
                 if isinstance(op, DpRegWrite):
-                    writers.setdefault(op.reg, []).append((blk.group, op.src))
+                    writers.setdefault(op.reg, []).append(
+                        (blk.group, op.src, op.off))
         if not writers:
             return
         self.w()
-        self.w("  // register write-back (one driver block per register)")
+        self.w("  // register write-back (one driver block per register;")
+        self.w("  // each write latches at its scheduled in-group offset)")
         for reg, uses in writers.items():
             self.w("  always_ff @(posedge clk) begin")
             kw = "if"
-            for group, src in uses:
-                fid = self.group_fid[group]
-                self.w(f"    {kw} (g_{group}_go && "
-                       f"(fsm{fid}_cnt == 32'd1)) begin")
+            # reversed: when clamping lands two same-group writes on one
+            # cycle, the priority chain resolves to the later micro-op
+            for group, src, off in reversed(uses):
+                self.w(f"    {kw} ({self._cnt_cond(group, off)}) begin")
                 self.w(f"      reg_{reg} <= {self.wire(group, src)};")
                 self.w("    end")
                 kw = "else if"
@@ -502,10 +577,10 @@ class _Emitter:
         accesses: Dict[str, List[Tuple[str, bool, str, Optional[str]]]] = \
             {bn: [] for bn in net.banks}
         for blk in net.blocks.values():
-            resolve = self.resolver(blk.group)
             for op in blk.ops:
                 if not isinstance(op, (DpMemRead, DpMemWrite)):
                     continue
+                resolve = self.resolver_at(blk.group, op.off)
                 spec = net.mems[op.mem]
                 flat = _sv_aexpr(self.flat_addr(op.mem, op.idxs), resolve)
                 base_guard = f"({self._cnt_cond(blk.group, op.off)})"
@@ -571,6 +646,8 @@ class _Emitter:
             out.append(f"{pad}fsm{f.fid}_cnt <= 32'd{st.join_cycles};")
         elif st.kind != "done":
             out.append(f"{pad}fsm{f.fid}_cnt <= 32'd{st.cycles};")
+        if st.kind == "pipe":
+            out.append(f"{pad}fsm{f.fid}_pipe_cd <= 32'd{st.pipe[2]};")
         if st.set_idx is not None:
             reg = self.net.index_regs[(f.fid, st.set_idx)]
             out.append(f"{pad}{reg.name} <= 32'sd0;")
@@ -604,6 +681,34 @@ class _Emitter:
                     self.w(f"          if (!{go}) begin")
                     self.w(f"            fsm{f.fid}_state <= "
                            f"{self.idle_lp(f.fid)};")
+                    self.w("          end")
+                    self.w("        end")
+                    continue
+                if st.kind == "pipe":
+                    # pipelined loop: the down-counter spans the whole
+                    # residence; a modulo-II launch counter advances the
+                    # (free-running) loop index once per initiation
+                    # interval — datapath guards rewind it per stage
+                    var, _extent, ii, _lat = st.pipe
+                    reg = self.net.index_regs[(f.fid, var)]
+                    self.w(f"        {lp}: begin")
+                    self.w(f"          if (fsm{f.fid}_cnt <= 32'd1) begin")
+                    for ln in self._enter(f, st.next, "            "):
+                        self.w(ln)
+                    self.w("          end")
+                    self.w("          else begin")
+                    self.w(f"            fsm{f.fid}_cnt <= "
+                           f"fsm{f.fid}_cnt - 32'd1;")
+                    self.w(f"            if (fsm{f.fid}_pipe_cd <= 32'd1) "
+                           f"begin")
+                    self.w(f"              {reg.name} <= "
+                           f"{reg.name} + 32'sd1;")
+                    self.w(f"              fsm{f.fid}_pipe_cd <= 32'd{ii};")
+                    self.w("            end")
+                    self.w("            else begin")
+                    self.w(f"              fsm{f.fid}_pipe_cd <= "
+                           f"fsm{f.fid}_pipe_cd - 32'd1;")
+                    self.w("            end")
                     self.w("          end")
                     self.w("        end")
                     continue

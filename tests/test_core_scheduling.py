@@ -1,0 +1,181 @@
+"""Differential harness for the static scheduling layer (opt_level 0/1/2).
+
+For every design in the benchmark matrix x banking factors {1,2,4} x
+opt_level {0,1,2} x share {on,off}:
+
+    estimate.cycles == sim-measured cycles == RTL-measured cycles (exactly)
+    RTL outputs == Calyx-sim outputs == affine-interpreter outputs (bits)
+    all ~= jnp oracle (1e-4)
+
+plus focused tests of the layer itself: chaining is cycle-neutral along
+``seq`` and monotone overall, pipelined loops exist and carry their II,
+banked designs beat unbanked at opt_level 2 (the point of the layer),
+serializing pars warn with ``banking_efficiency < 1``, the bank-affine
+strip/conflict machinery, and same-process compile determinism.
+"""
+import functools
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import estimator, frontend, pipeline, schedule
+
+from benchmarks.calyx_bench import DESIGNS
+
+OPT_LEVELS = (0, 1, 2)
+
+
+@functools.lru_cache(maxsize=None)
+def _compiled(design: str, factor: int, opt: int, share: bool = True):
+    builder, shape = DESIGNS[design]
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", estimator.BankingEfficiencyWarning)
+        return pipeline.compile_model(builder(), [shape], factor=factor,
+                                      share=share, opt_level=opt)
+
+
+def _input(design: str) -> np.ndarray:
+    _, shape = DESIGNS[design]
+    return np.random.default_rng(7).normal(size=shape).astype(np.float32)
+
+
+class TestSchedulingDifferential:
+    """est == sim == RTL, bit-exact outputs, at every opt level."""
+
+    @pytest.mark.parametrize("share", [True, False])
+    @pytest.mark.parametrize("opt", OPT_LEVELS)
+    @pytest.mark.parametrize("factor", [1, 2, 4])
+    @pytest.mark.parametrize("design", sorted(DESIGNS))
+    def test_matrix(self, design, factor, opt, share):
+        d = _compiled(design, factor, opt, share)
+        x = _input(design)
+        sim_outs, sim_stats = d.simulate({"arg0": x})
+        rtl_outs, rtl_stats = d.simulate_rtl({"arg0": x})
+        interp = d.run({"arg0": x})
+        assert sim_stats.cycles == d.estimate.cycles == rtl_stats.cycles
+        for s, r, i in zip(sim_outs, rtl_outs, interp):
+            np.testing.assert_allclose(s, r, rtol=0, atol=0)
+            np.testing.assert_allclose(s, i, rtol=0, atol=0)
+        oracle = d.run_oracle({"arg0": x})
+        for s, o in zip(sim_outs, oracle):
+            np.testing.assert_allclose(s, o, rtol=1e-4, atol=1e-4)
+
+
+class TestSchedulingWins:
+    @pytest.mark.parametrize("design", sorted(DESIGNS))
+    def test_opt_levels_monotone(self, design):
+        for factor in (1, 2, 4):
+            c = {opt: _compiled(design, factor, opt).estimate.cycles
+                 for opt in OPT_LEVELS}
+            assert c[2] <= c[1] <= c[0], (design, factor, c)
+
+    @pytest.mark.parametrize("design", sorted(DESIGNS))
+    def test_banked_beats_unbanked_at_opt2(self, design):
+        """The acceptance headline: with the scheduling layer on, banking
+        buys cycles on every benchmark (conv2d banks=4 used to be 3.6x
+        *worse* than unbanked; matmul banks=2 used to regress too)."""
+        base = _compiled(design, 1, 2).estimate.cycles
+        for factor in (2, 4):
+            banked = _compiled(design, factor, 2).estimate.cycles
+            assert banked < base, (design, factor, banked, base)
+
+    def test_chaining_is_cycle_neutral_along_seq(self):
+        """At factor 1 there are no pars: opt 1 only fuses seq runs,
+        which must not change a single cycle."""
+        for design in DESIGNS:
+            c0 = _compiled(design, 1, 0).estimate.cycles
+            c1 = _compiled(design, 1, 1).estimate.cycles
+            assert c0 == c1, design
+
+    def test_chaining_collapses_fsm_states(self):
+        """The chaining motivation: attention at factor 4 burns >1000 FSM
+        states unfused; fusion must collapse them (and recover fmax)."""
+        d0 = _compiled("attention", 4, 0)
+        d1 = _compiled("attention", 4, 1)
+        assert d1.estimate.fsm_states < 0.5 * d0.estimate.fsm_states
+        assert d1.estimate.fmax_mhz > d0.estimate.fmax_mhz
+        assert len(d1.component.groups) < len(d0.component.groups)
+
+    def test_pipelined_loops_annotated(self):
+        d = _compiled("matmul", 1, 2)
+        pipelined = d.component.meta.get("pipelined")
+        assert pipelined, "matmul's MAC reduction should pipeline"
+        mac = pipelined[0]
+        # accumulator recurrence: adder consumes at 4, latches at 6 -> II=2
+        assert mac["ii"] == 2 and mac["body_latency"] == 6
+        assert "pipeline ii=2" in d.calyx_text()
+
+    def test_pipelining_skipped_without_benefit(self):
+        """opt_level 2 on a design with nothing to pipeline changes
+        nothing (if-bodied loops are not single-group after chaining)."""
+        from repro.core import affine, calyx, chaining, pipelining
+        from repro.core import tensor_ir as T
+        g = T.Graph(name="mask")
+        x = g.add_input("arg0", (4, 4))
+        g.outputs = [T.causal_mask(g, x)]
+        comp = chaining.chain_component(
+            calyx.lower_program(affine.lower_graph(g)))
+        piped = pipelining.pipeline_loops(comp)
+        assert piped.meta["pipelined"] == []
+        assert estimator.cycles(piped) == estimator.cycles(comp)
+
+
+class TestBankingEfficiency:
+    def test_serializing_par_warns(self):
+        """Branchy-mode pars are never provably disjoint: compilation
+        must surface the serialization instead of hiding it in cycles."""
+        with pytest.warns(estimator.BankingEfficiencyWarning):
+            d = pipeline.compile_model(frontend.paper_ffnn(), [(1, 64)],
+                                       factor=2, mode="branchy",
+                                       check_hazards=False)
+        assert d.estimate.banking_efficiency < 1.0
+
+    def test_layout_mode_is_fully_parallel(self):
+        for design in DESIGNS:
+            for factor in (2, 4):
+                d = _compiled(design, factor, 0)
+                assert d.estimate.banking_efficiency == 1.0, (design, factor)
+
+    def test_efficiency_field_in_estimate_dict(self):
+        d = _compiled("matmul", 2, 0)
+        assert d.estimate.as_dict()["banking_efficiency"] == 1.0
+
+
+class TestBankAffineStripMining:
+    def test_strip_count_prefers_divisors_of_factor(self):
+        # extent 6, factor 4: gcd says 2, but 3 arms wrap the bank period
+        # only when stacked under another strip; standalone the divisor-of-
+        # factor preference still picks 2 (provably foldable digits)
+        assert schedule.strip_count(6, 4) == 2
+        assert schedule.strip_count(8, 4) == 4
+        assert schedule.strip_count(6, 2) == 2
+
+    def test_strip_count_fallback_needs_extent_covering_factor(self):
+        # extent 3 < factor 4: stripping would stack offsets past the
+        # bank period when combined with a sibling strip -> stay at 1
+        assert schedule.strip_count(3, 4) == 1
+        assert schedule.strip_count(7, 2) == 1
+        # extent 9 >= factor 4 with no common divisor: largest divisor
+        assert schedule.strip_count(9, 4) == 3
+
+    def test_runtime_banks_prove_distinct(self):
+        """The bank-affine conflict proof: matmul's output stores hit
+        runtime-selected banks (`i % 2` never folds), yet arms differing
+        by a constant unroll offset are provably parallel — this is what
+        un-serialized matmul f2 (2366 -> ~1070 cycles at opt 0)."""
+        d0 = _compiled("matmul", 2, 0)
+        assert d0.estimate.banking_efficiency == 1.0
+        assert d0.estimate.cycles < 1966      # beats its unbanked baseline
+
+
+class TestDeterminism:
+    def test_repeated_compiles_emit_identical_text(self):
+        """Satellite: the restructure counter is per-invocation, so two
+        compiles in one process must produce byte-identical artifacts."""
+        def build():
+            return pipeline.compile_model(frontend.paper_ffnn(), [(1, 64)],
+                                          factor=2, opt_level=2)
+        a, b = build(), build()
+        assert a.calyx_text() == b.calyx_text()
+        assert a.emit_verilog() == b.emit_verilog()
