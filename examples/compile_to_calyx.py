@@ -41,12 +41,17 @@ and writes it as SystemVerilog; ``--simulate-rtl`` executes
 that netlist cycle-by-cycle (``repro.core.rtl_sim``) and checks the
 measured cycles against the estimate — the last two stages of the
 four-way differential harness.
+
+``--verify`` (the default) runs the stage-boundary static verifier
+(``repro.core.verify``) at every boundary the compile crosses and prints
+the per-stage diagnostic table — codes, severities, provenance chains;
+``--no-verify`` skips it (the paper's original unchecked flow).
 """
 import argparse
 
 import numpy as np
 
-from repro.core import frontend, pipeline
+from repro.core import diagnostics, frontend, pipeline
 
 MODELS = {
     "ffnn": (frontend.paper_ffnn, (1, 64)),
@@ -74,6 +79,12 @@ def main():
     ap.add_argument("--simulate-rtl", action="store_true",
                     help="execute the RTL netlist cycle-by-cycle and check "
                          "measured cycles against the estimate")
+    ap.add_argument("--verify", dest="verify", action="store_true",
+                    default=True,
+                    help="run the stage-boundary static verifier and print "
+                         "the diagnostic table (default)")
+    ap.add_argument("--no-verify", dest="verify", action="store_false",
+                    help="skip stage-boundary verification")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
@@ -82,7 +93,8 @@ def main():
                                mode=args.mode,
                                check_hazards=args.mode == "layout",
                                share=not args.no_share,
-                               opt_level=args.opt_level)
+                               opt_level=args.opt_level,
+                               verify=args.verify)
     text = d.calyx_text()
     out = args.out or f"/tmp/{args.model}_f{args.factor}_{args.mode}.futil"
     with open(out, "w") as f:
@@ -139,6 +151,9 @@ def main():
         print(f"  rtl: transitions={rstats.fsm_transitions} "
               f"groups={rstats.group_fires} reads={rstats.mem_reads} "
               f"writes={rstats.mem_writes} par_forks={rstats.par_forks}")
+    if args.verify:
+        print()
+        print(diagnostics.render_table(d.verify_reports))
 
 
 if __name__ == "__main__":

@@ -8,6 +8,14 @@ predates the scheduling layer) is read as opt_level 0.  Points present
 only on one side are reported but never fail the gate — new designs and
 a trimmed CI matrix are both expected.
 
+Schema-4 files also carry per-point ``compile_us``/``verify_us`` stamps
+(the stage-boundary verifier's share of compile time); the gate fails if
+the aggregate verifier overhead — sum(verify_us) / sum(compile_us) over
+the new file — exceeds ``--verify-overhead`` (default 15%; the
+five-boundary suite measures ~13-14% across the full matrix, see the
+"Static verification" section of the README).  Older files without the
+stamps skip that check.
+
     PYTHONPATH=src python scripts/check_perf_regression.py \
         --baseline BENCH_calyx.json --new /tmp/bench_new.json
 """
@@ -21,18 +29,21 @@ from typing import Dict, Tuple
 Key = Tuple[str, int, bool, int]
 
 
-def load(path: str) -> Tuple[int, Dict[Key, int]]:
+def load(path: str) -> Tuple[int, Dict[Key, int], Tuple[float, float]]:
     with open(path) as f:
         data = json.load(f)
     schema = data.get("schema", 0)
     rows: Dict[Key, int] = {}
+    compile_us = verify_us = 0.0
     for rec in data.get("records", []):
         if "error" in rec or "cycles" not in rec:
             continue
         key = (rec["design"], int(rec["banks"]), bool(rec["share"]),
                int(rec.get("opt_level", 0)))
         rows[key] = int(rec["cycles"])
-    return schema, rows
+        compile_us += float(rec.get("compile_us", 0.0))
+        verify_us += float(rec.get("verify_us", 0.0))
+    return schema, rows, (compile_us, verify_us)
 
 
 def main() -> int:
@@ -43,10 +54,13 @@ def main() -> int:
                     help="freshly generated benchmark JSON")
     ap.add_argument("--tolerance", type=float, default=0.02,
                     help="allowed relative cycle growth (default 2%%)")
+    ap.add_argument("--verify-overhead", type=float, default=0.15,
+                    help="max verifier share of compile time over the new "
+                         "file's matrix (default 15%%; schema 4+ only)")
     args = ap.parse_args()
 
-    _, base = load(args.baseline)
-    _, new = load(args.new)
+    _, base, _ = load(args.baseline)
+    _, new, (compile_us, verify_us) = load(args.new)
     regressions = []
     improved = 0
     for key, cycles in sorted(new.items()):
@@ -67,11 +81,24 @@ def main() -> int:
     if missing:
         print(f"  ({len(missing)} baseline points not regenerated — "
               f"trimmed matrix)")
+    overhead_fail = None
+    if compile_us > 0 and verify_us > 0:
+        ratio = verify_us / compile_us
+        tag = "ok" if ratio < args.verify_overhead else "FAIL"
+        print(f"  verifier overhead: {verify_us / 1e3:.1f}ms of "
+              f"{compile_us / 1e3:.1f}ms compile = {ratio:.1%} "
+              f"(limit {args.verify_overhead:.0%}) {tag}")
+        if ratio >= args.verify_overhead:
+            overhead_fail = ratio
     if regressions:
         print(f"\nFAIL: {len(regressions)} point(s) regressed beyond "
               f"{args.tolerance:.0%}:")
         for key, ref, cycles, delta in regressions:
             print(f"  {key}: {ref} -> {cycles} ({delta:+.1%})")
+        return 1
+    if overhead_fail is not None:
+        print(f"\nFAIL: stage-boundary verifier costs {overhead_fail:.1%} "
+              f"of compile time (limit {args.verify_overhead:.0%})")
         return 1
     print(f"\nOK: no cycle regressions beyond {args.tolerance:.0%} "
           f"({improved} improved, {len(new)} points checked)")

@@ -1,0 +1,74 @@
+"""Compile one design and run the stage-boundary verifier — lint mode.
+
+Compiles the requested model through the full flow (lower -> chaining ->
+pipelining -> sharing -> RTL netlist), running ``repro.core.verify`` at
+every stage boundary, and prints the diagnostic table.  Exit status is
+nonzero iff any error-severity finding fired — warnings print but pass —
+so the script doubles as a pre-commit / CI lint gate for a design:
+
+    PYTHONPATH=src python scripts/lint_design.py --model ffnn --factor 2
+    PYTHONPATH=src python scripts/lint_design.py --model attention \
+        --factor 4 --opt-level 2 --no-share
+
+Models: the four benchmark microdesigns (matmul, conv2d, ffnn,
+attention) plus the paper's cnn and mha.  A compile whose boundary check
+raises ``VerificationError`` still prints the offending stage's table
+before exiting 1 — the table, not the traceback, is the product.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.core import diagnostics, frontend, pipeline
+
+MODELS = {
+    "matmul": (lambda: frontend.Linear(8, 8, bias=False), (4, 8)),
+    "conv2d": (lambda: frontend.Conv2d(2, 2, 3, 3), (2, 6, 6)),
+    "ffnn": (frontend.paper_ffnn, (1, 64)),
+    "attention": (lambda: frontend.MultiheadAttention(8, 2), (4, 8)),
+    "cnn": (frontend.paper_cnn, (3, 80, 60)),
+    "mha": (frontend.paper_mha, (8, 42)),
+}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--model", choices=list(MODELS), default="ffnn")
+    ap.add_argument("--factor", type=int, default=2, choices=(1, 2, 4))
+    ap.add_argument("--opt-level", type=int, default=2, choices=(0, 1, 2))
+    ap.add_argument("--no-share", action="store_true")
+    ap.add_argument("--mode", choices=("layout", "branchy"),
+                    default="layout")
+    args = ap.parse_args()
+
+    builder, shape = MODELS[args.model]
+    print(f"lint {args.model} factor={args.factor} "
+          f"opt_level={args.opt_level} share={not args.no_share} "
+          f"mode={args.mode}")
+    try:
+        d = pipeline.compile_model(builder(), [shape], factor=args.factor,
+                                   mode=args.mode,
+                                   check_hazards=args.mode == "layout",
+                                   share=not args.no_share,
+                                   opt_level=args.opt_level)
+        d.to_rtl()
+        reports = d.verify_reports
+    except diagnostics.VerificationError as exc:
+        print(diagnostics.render_table([exc.report]))
+        print(f"\nFAIL: {len(exc.report.errors())} error(s) at "
+              f"{exc.report.stage}")
+        return 1
+    print(diagnostics.render_table(reports))
+    errors = sum(len(r.errors()) for r in reports)
+    warnings = sum(len(r.warnings()) for r in reports)
+    if errors:
+        print(f"\nFAIL: {errors} error(s), {warnings} warning(s)")
+        return 1
+    verdict = "clean" if not warnings else f"{warnings} warning(s)"
+    print(f"\nOK: {len(reports)} stage(s) checked, {verdict}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

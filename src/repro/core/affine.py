@@ -76,12 +76,13 @@ class AExpr:
     ``(bank+1) - bank`` must fold to the constant 1).
     """
 
-    __slots__ = ("coeffs", "const", "_key")
+    __slots__ = ("coeffs", "const", "_key", "_free")
 
     def __init__(self, coeffs: Optional[Dict[Atom, int]] = None, const: int = 0):
         self.coeffs = {a: c for a, c in (coeffs or {}).items() if c != 0}
         self.const = int(const)
         self._key = None
+        self._free = None
 
     def __eq__(self, other):
         return isinstance(other, AExpr) and self.key() == other.key()
@@ -153,14 +154,16 @@ class AExpr:
             # Vars are leaves.
         return False
 
-    def free_vars(self) -> set:
-        out = set()
-        for a in self.coeffs:
-            if isinstance(a, Var):
-                out.add(a.name)
-            else:
-                out |= a.inner.free_vars()
-        return out
+    def free_vars(self) -> frozenset:
+        if self._free is None:
+            out = set()
+            for a in self.coeffs:
+                if isinstance(a, Var):
+                    out.add(a.name)
+                else:
+                    out |= a.inner.free_vars()
+            self._free = frozenset(out)
+        return self._free
 
     def key(self) -> tuple:
         if self._key is None:

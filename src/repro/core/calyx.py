@@ -340,6 +340,27 @@ def lower_program(prog: Program) -> Component:
     return _Lower(prog).run()
 
 
+def referenced_groups(node: CNode) -> Set[str]:
+    """Names of every group reachable from ``node`` — the liveness set the
+    chaining pass filters to and the verifier's dead-group analysis uses."""
+    out: Set[str] = set()
+
+    def walk(n: CNode) -> None:
+        if isinstance(n, GEnable):
+            out.add(n.group)
+        elif isinstance(n, (CSeq, CPar)):
+            for ch in n.children:
+                walk(ch)
+        elif isinstance(n, CRepeat):
+            walk(n.body)
+        elif isinstance(n, CIf):
+            walk(n.then)
+            walk(n.els)
+
+    walk(node)
+    return out
+
+
 # ---------------------------------------------------------------------------
 # Text emission (futil-like) for debuggability
 # ---------------------------------------------------------------------------

@@ -40,14 +40,14 @@ from typing import Dict, List, Optional, Tuple
 from . import dataflow as D
 from . import estimator
 from .calyx import (CIf, CNode, CPar, CRepeat, CSeq, Component, GEnable,
-                    Group)
+                    Group, referenced_groups)
 
 
 def _max_temp(uops: List[D.UOp]) -> int:
     """Highest SSA temp id used in a micro-op list (-1 if none)."""
     hi = -1
     for u in uops:
-        for field in ("dst", "a", "b", "src"):
+        for field in D.TEMP_FIELDS:
             v = getattr(u, field, None)
             if isinstance(v, int):
                 hi = max(hi, v)
@@ -58,7 +58,7 @@ def _shift_uop(u: D.UOp, tmp_base: int, cyc_base: int) -> D.UOp:
     """Renumber one micro-op's temps by ``tmp_base`` and shift its cycle
     offset by ``cyc_base`` (the fused group's running latency)."""
     kw: Dict[str, int] = {}
-    for field in ("dst", "a", "b", "src"):
+    for field in D.TEMP_FIELDS:
         v = getattr(u, field, None)
         if isinstance(v, int):
             kw[field] = v + tmp_base
@@ -235,19 +235,6 @@ class _Chainer:
         raise TypeError(node)
 
 
-def _referenced_groups(node: CNode, out: set) -> None:
-    if isinstance(node, GEnable):
-        out.add(node.group)
-    elif isinstance(node, (CSeq, CPar)):
-        for ch in node.children:
-            _referenced_groups(ch, out)
-    elif isinstance(node, CRepeat):
-        _referenced_groups(node.body, out)
-    elif isinstance(node, CIf):
-        _referenced_groups(node.then, out)
-        _referenced_groups(node.els, out)
-
-
 def chain_component(comp: Component) -> Component:
     """Fuse groups along ``seq`` runs and across compatible ``par`` arms.
 
@@ -259,8 +246,7 @@ def chain_component(comp: Component) -> Component:
     """
     chainer = _Chainer(comp)
     control = chainer.rewrite(comp.control)
-    live: set = set()
-    _referenced_groups(control, live)
+    live = referenced_groups(control)
     groups = {name: g for name, g in chainer.groups.items() if name in live}
     out = Component(comp.name, comp.cells, groups, control,
                     meta=dict(comp.meta))

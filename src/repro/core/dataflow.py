@@ -95,6 +95,29 @@ class UMemWrite(UOp):
     off: int                  # cycle offset of the write-port access
 
 
+# Integer-temp fields a micro-op may carry — the single source for passes
+# that renumber or analyze the SSA space (chaining, verify).
+TEMP_FIELDS = ("dst", "a", "b", "src")
+
+
+def temp_def(u: UOp) -> Optional[int]:
+    """The temp a micro-op defines, or None (writes define no temp)."""
+    if isinstance(u, (UConst, URegRead, UMemRead, UAlu, USelect)):
+        return u.dst
+    return None
+
+
+def temp_uses(u: UOp) -> List[int]:
+    """The temps a micro-op reads, in operand order."""
+    if isinstance(u, UAlu):
+        return [u.a] if u.b is None else [u.a, u.b]
+    if isinstance(u, USelect):
+        return [u.a, u.b]
+    if isinstance(u, (URegWrite, UMemWrite)):
+        return [u.src]
+    return []
+
+
 _BIN = {
     "add": lambda a, b: a + b,
     "sub": lambda a, b: a - b,

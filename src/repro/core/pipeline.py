@@ -65,7 +65,9 @@ from . import rtl_sim
 from . import sim as calyx_sim
 from . import tensor_ir as T
 from . import jax_backend
+from . import verify as verify_mod
 from . import verilog
+from .diagnostics import DiagnosticReport
 
 
 @dataclasses.dataclass
@@ -78,6 +80,12 @@ class CompiledDesign:
     spec: banking.BankingSpec
     sharing: Optional[sharing.SharingReport] = None
     opt_level: int = 0               # scheduling level the design was built at
+    # stage-boundary verification (core.verify): one DiagnosticReport per
+    # boundary the compile crossed; empty when the design was compiled with
+    # verify=False.  to_rtl() appends the post-RTL report lazily.
+    verify_reports: List[DiagnosticReport] = dataclasses.field(
+        default_factory=list, repr=False, compare=False)
+    verify_enabled: bool = True
     _netlist: Optional[rtl_ir.Netlist] = dataclasses.field(
         default=None, repr=False, compare=False)
 
@@ -130,10 +138,17 @@ class CompiledDesign:
     # -- RTL backend ----------------------------------------------------------
     def to_rtl(self) -> rtl_ir.Netlist:
         """Lower the Calyx component to the FSM + datapath netlist
-        (cached — the netlist is deterministic for a compiled design)."""
+        (cached — the netlist is deterministic for a compiled design).
+        When the design was compiled with ``verify=True`` the netlist is
+        statically checked at this boundary too (post-RTL: multi-driven
+        nets, combinational loops, FSM reachability)."""
         if self._netlist is None:
-            self._netlist = rtl_ir.lower_component(self.component,
-                                                   self.program)
+            net = rtl_ir.lower_component(self.component, self.program)
+            if self.verify_enabled:
+                rep = verify_mod.verify_netlist(net)
+                self.verify_reports.append(rep)
+                rep.raise_if_errors()
+            self._netlist = net
         return self._netlist
 
     def emit_verilog(self, path: Optional[str] = None) -> str:
@@ -183,7 +198,8 @@ def compile_graph(graph: T.Graph, factor: int = 1, mode: str = "layout",
                   restructure: bool = True,
                   check_hazards: bool = True,
                   share: bool = True,
-                  opt_level: int = 0) -> CompiledDesign:
+                  opt_level: int = 0,
+                  verify: bool = True) -> CompiledDesign:
     """Compile a tensor graph to a Calyx component + estimate.
 
     ``opt_level`` selects the static scheduling layer between lowering
@@ -198,6 +214,15 @@ def compile_graph(graph: T.Graph, factor: int = 1, mode: str = "layout",
       innermost single-group repeats get an initiation interval from
       memory-port, non-pipelined-unit, and loop-carried register
       constraints, and iterations overlap.
+
+    ``verify`` (default on) runs the stage-boundary static verifier
+    (``core.verify``) on every lowered artifact — post-lower,
+    post-chaining, post-pipelining, post-sharing, and (lazily, in
+    ``to_rtl``) post-RTL — raising
+    :class:`~.diagnostics.VerificationError` on any error-severity
+    finding, and strips dead groups/cells the liveness analysis proves
+    unreachable (cycle-neutral).  The per-stage reports are kept on
+    ``CompiledDesign.verify_reports``.
 
     Every level preserves the end-to-end invariant: estimator cycles ==
     Calyx-sim cycles == RTL-sim cycles exactly, and outputs bit-equal to
@@ -217,16 +242,43 @@ def compile_graph(graph: T.Graph, factor: int = 1, mode: str = "layout",
     if factor > 1:
         hazards = banking.check_par_hazards(
             prog, raise_on_conflict=(check_hazards and mode == "layout"))
+    reports: List[DiagnosticReport] = []
+    # one cache across all of this compile's boundaries: groups a pass
+    # carries over unchanged skip re-proving their per-group checks
+    vcache = verify_mod.GroupCache()
+
+    def checkpoint(stage: str, component: calyx.Component) -> None:
+        if not verify:
+            return
+        rep = verify_mod.verify_component(component, prog, stage=stage,
+                                          cache=vcache)
+        reports.append(rep)
+        rep.raise_if_errors()
+
     comp = calyx.lower_program(prog)
+    checkpoint("post-lower", comp)
     if opt_level >= 1:
         comp = chaining.chain_component(comp)
+        checkpoint("post-chaining", comp)
     if opt_level >= 2:
         comp = pipelining.pipeline_loops(comp)
+        checkpoint("post-pipelining", comp)
+    if verify:
+        # liveness-fed cleanup: provably cycle-neutral (control untouched)
+        comp, _removed = verify_mod.eliminate_dead(comp, vcache)
     report = None
     pre_cycles = None
     if share:
         pre_cycles = estimator.cycles(comp)
+        pre_groups = comp.groups
         comp, report = sharing.share_cells(comp)
+        if verify:
+            # carry clean verdicts across the rebind after re-proving,
+            # uop by uop, that binding changed nothing but cell names
+            bound = {orig: pool for pool, origs in report.pools.items()
+                     for orig in origs}
+            vcache.transfer_rebound(pre_groups, comp.groups, bound)
+    checkpoint("post-sharing", comp)
     est = estimator.estimate(comp)
     if pre_cycles is not None and est.cycles != pre_cycles:
         # load-bearing invariant: survives python -O
@@ -245,7 +297,8 @@ def compile_graph(graph: T.Graph, factor: int = 1, mode: str = "layout",
             f"efficiency {est.banking_efficiency}",
             estimator.BankingEfficiencyWarning, stacklevel=2)
     return CompiledDesign(graph, prog, comp, est, hazards, spec,
-                          sharing=report, opt_level=opt_level)
+                          sharing=report, opt_level=opt_level,
+                          verify_reports=reports, verify_enabled=verify)
 
 
 def compile_model(module: frontend.Module, input_shapes,
@@ -253,8 +306,9 @@ def compile_model(module: frontend.Module, input_shapes,
                   restructure: bool = True, name: str = "main",
                   check_hazards: bool = True,
                   share: bool = True,
-                  opt_level: int = 0) -> CompiledDesign:
+                  opt_level: int = 0,
+                  verify: bool = True) -> CompiledDesign:
     graph = frontend.trace(module, input_shapes, name=name)
     return compile_graph(graph, factor=factor, mode=mode,
                          restructure=restructure, check_hazards=check_hazards,
-                         share=share, opt_level=opt_level)
+                         share=share, opt_level=opt_level, verify=verify)

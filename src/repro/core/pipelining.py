@@ -166,6 +166,16 @@ def _rows_admit(rows: Dict[Tuple, Set[int]], ii: int) -> bool:
     return True
 
 
+# Public faces of the II constraint families — the stage-boundary verifier
+# (core.verify) re-proves every annotated II through these same functions,
+# so an unsound annotation is caught statically with the exact model the
+# pass used to compute it.
+register_floor = _register_floor
+unit_floor = _unit_floor
+port_offsets = _port_offsets
+rows_admit = _rows_admit
+
+
 def compute_ii(comp: Component, g: Group) -> int:
     """Smallest admissible initiation interval for ``g`` as a loop body,
     or 0 when the loop should stay unpipelined."""

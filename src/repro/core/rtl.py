@@ -606,6 +606,6 @@ def lower_component(comp: Component, prog: Program) -> Netlist:
     for g in comp.groups.values():
         if not g.uops:
             raise ValueError(
-                f"group {g.name} carries no micro-ops — re-lower with "
-                f"calyx.lower_program before the RTL backend")
+                f"[RV007] group {g.name} carries no micro-ops — re-lower "
+                f"with calyx.lower_program before the RTL backend")
     return _RtlLower(comp, prog).run()

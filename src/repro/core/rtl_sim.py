@@ -279,7 +279,7 @@ class _RtlSim:
             self.stats.broadcast_reads += 1
             return
         raise RtlSimError(
-            f"bank {bank} port double-driven at cycle {cycle}: "
+            f"[RV020] bank {bank} port double-driven at cycle {cycle}: "
             f"{'write' if is_store else 'read'}@{addr} vs "
             f"{'write' if pstore else 'read'}@{paddr} — the bank has one "
             f"port, one access per cycle")
@@ -290,7 +290,8 @@ class _RtlSim:
             owner = self._unit_owner.setdefault((unit, c), group)
             if owner != group:
                 raise RtlSimError(
-                    f"shared unit {unit} granted to {group} while owned by "
+                    f"[RV021] shared unit {unit} granted to {group} while "
+                    f"owned by "
                     f"{owner} at cycle {c} — operand muxes need two selects "
                     f"in one cycle")
 

@@ -222,10 +222,16 @@ def share_cells(comp: Component) -> Tuple[Component, SharingReport]:
                                        orig_cell=u.orig_cell or u.cell)
         return u
 
+    # Rebuild only groups that actually drive a pooled cell; untouched
+    # groups keep their identity, so the stage-boundary verifier's
+    # already-checked cache stays valid across the sharing boundary.
     new_groups = {
-        g.name: Group(g.name, g.latency,
-                      [bound.get(c, c) for c in g.cells], g.ports,
-                      [_route(u) for u in g.uops])
+        g.name: (Group(g.name, g.latency,
+                       [bound.get(c, c) for c in g.cells], g.ports,
+                       [_route(u) for u in g.uops])
+                 if any(c in bound for c in g.cells)
+                 or any(isinstance(u, D.UAlu) and u.cell in bound
+                        for u in g.uops) else g)
         for g in comp.groups.values()
     }
 
@@ -251,6 +257,18 @@ def share_cells(comp: Component) -> Tuple[Component, SharingReport]:
 # ---------------------------------------------------------------------------
 
 
+def pool_cells_by_group(comp: Component) -> Dict[str, Set[str]]:
+    """group name -> shared pool cells (``users > 1``) it drives.  Shared
+    by :func:`verify_sharing` and the static single-owner proof in
+    ``core.verify`` (RV021)."""
+    return {
+        g.name: {c for c in g.cells
+                 if comp.cells.get(c) is not None
+                 and comp.cells[c].users > 1}
+        for g in comp.groups.values()
+    }
+
+
 def verify_sharing(comp: Component,
                    pairs: "Set[frozenset] | None" = None) -> None:
     """Check no two concurrent groups reference the same shared pool cell.
@@ -262,12 +280,7 @@ def verify_sharing(comp: Component,
     survive ``python -O``).  ``pairs`` lets callers reuse an
     already-computed concurrency relation.
     """
-    shared_by_group = {
-        g.name: {c for c in g.cells
-                 if comp.cells.get(c) is not None
-                 and comp.cells[c].users > 1}
-        for g in comp.groups.values()
-    }
+    shared_by_group = pool_cells_by_group(comp)
     if pairs is None:
         pairs = concurrent_pairs(comp.control)
     for pair in pairs:

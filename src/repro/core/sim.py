@@ -135,9 +135,13 @@ class _Sim:
         if not is_store and not pstore and paddr == addr:
             self.stats.broadcast_reads += 1   # one read port feeds both
             return
+        # same stable codes the static verifier reports: RV022 when the
+        # clash comes from overlapped pipelined iterations (an unsound II),
+        # RV020 for a plain same-cycle port conflict
+        code = "RV022" if self._pipe_depth > 0 else "RV020"
         raise SimError(
-            f"memory port violation on {mem} bank {bank} at cycle {cycle}: "
-            f"{'write' if is_store else 'read'}@{addr} clashes with "
+            f"[{code}] memory port violation on {mem} bank {bank} at cycle "
+            f"{cycle}: {'write' if is_store else 'read'}@{addr} clashes with "
             f"{'write' if pstore else 'read'}@{paddr} — Calyx memories "
             f"accept one access per cycle")
 
@@ -167,9 +171,9 @@ class _Sim:
             g = self.comp.groups[node.group]
             if not g.uops:
                 raise SimError(
-                    f"group {g.name} carries no micro-ops — the component "
-                    f"was built without datapath semantics (re-lower with "
-                    f"calyx.lower_program)")
+                    f"[RV007] group {g.name} carries no micro-ops — the "
+                    f"component was built without datapath semantics "
+                    f"(re-lower with calyx.lower_program)")
             self.stats.group_activations += 1
             if self._par_depth == 0 and self._pipe_depth == 0:
                 # sequential flow: earlier windows are strictly in the past
@@ -211,8 +215,8 @@ class _Sim:
             return t
         if isinstance(node, CIf):
             if node.cond is None:
-                raise SimError("if-node carries no condition — component "
-                               "predates the executable lowering")
+                raise SimError("[RV005] if-node carries no condition — "
+                           "component predates the executable lowering")
             body_start = start + node.cond_latency + F.IF_SELECT_CYCLES
             taken = node.then if node.cond.evaluate(self._env) else node.els
             other = node.els if taken is node.then else node.then
@@ -298,8 +302,8 @@ class _Sim:
                 both = sets[i] & sets[j]
                 if both:
                     raise SimError(
-                        f"shared cell(s) {sorted(both)} invoked from two "
-                        f"concurrent par components — single-owner "
+                        f"[RV021] shared cell(s) {sorted(both)} invoked "
+                        f"from two concurrent par components — single-owner "
                         f"arbitration of shared functional units failed")
 
 

@@ -64,6 +64,7 @@ import re
 import struct
 from typing import Dict, List, Optional, Tuple
 
+from . import diagnostics
 from .affine import AExpr, Cond, DivAtom, ModAtom, Var
 from .rtl import (DpBlock, DpConst, DpMemRead, DpMemWrite, DpRegRead,
                   DpRegWrite, DpSelect, DpUnit, Netlist)
@@ -794,18 +795,25 @@ _KEYWORDS = frozenset({
 MEM_INIT_MODULE = "repro_mem_bank"
 
 
-def lint(text: str) -> List[str]:
+def lint_diagnostics(text: str) -> List["diagnostics.Diagnostic"]:
     """Check the emitted SystemVerilog for behavioral constructs.
 
-    Returns a list of violations (empty = clean):
+    Returns structured :class:`~.diagnostics.Diagnostic` findings (empty =
+    clean) with the verifier's stable codes:
 
-    * ``#<n>`` delay controls anywhere;
-    * ``initial`` blocks outside the memory-bank primitive (memory init
-      is the one allowed use);
-    * multi-driver nets: a signal assigned from more than one
+    * ``RV040`` — ``#<n>`` delay controls anywhere;
+    * ``RV041`` — ``initial`` blocks outside the memory-bank primitive
+      (memory init is the one allowed use);
+    * ``RV042`` — multi-driver nets: a signal assigned from more than one
       ``assign`` / ``always`` block within a module.
+
+    :func:`lint` is the original plain-string face of the same checks.
     """
-    errors: List[str] = []
+    errors: List[diagnostics.Diagnostic] = []
+
+    def err(code: str, message: str, *prov: str) -> None:
+        errors.append(diagnostics.diag(code, message, stage="verilog-lint",
+                                       provenance=prov))
     module = ""
     always_depth = 0           # begin/end nesting inside an always block
     in_always = False
@@ -826,11 +834,12 @@ def lint(text: str) -> List[str]:
             in_always = False
             always_depth = 0
         if _DELAY_RE.search(line):
-            errors.append(f"line {ln}: delay control in {module}: "
-                          f"{raw.strip()}")
+            err("RV040", f"line {ln}: delay control in {module}: "
+                f"{raw.strip()}", f"module:{module}", f"line:{ln}")
         if re.search(r"\binitial\b", line) and module != MEM_INIT_MODULE:
-            errors.append(f"line {ln}: initial block outside memory init "
-                          f"({module}): {raw.strip()}")
+            err("RV041", f"line {ln}: initial block outside memory init "
+                f"({module}): {raw.strip()}", f"module:{module}",
+                f"line:{ln}")
         stripped = line.strip()
         if stripped.startswith(("always_ff", "always_comb", "initial")):
             in_always = True
@@ -856,6 +865,12 @@ def lint(text: str) -> List[str]:
             note(wm.group(1), f"wire@{ln}")
     for (mod, sig), drvs in drivers.items():
         if len(drvs) > 1:
-            errors.append(f"multi-driver net {sig} in {mod}: "
-                          f"{sorted(drvs)}")
+            err("RV042", f"multi-driver net {sig} in {mod}: "
+                f"{sorted(drvs)}", f"module:{mod}", f"net:{sig}")
     return errors
+
+
+def lint(text: str) -> List[str]:
+    """Plain-string shim over :func:`lint_diagnostics` (kept for existing
+    callers/tests): one message per finding, empty = clean."""
+    return [d.message for d in lint_diagnostics(text)]

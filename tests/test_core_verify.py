@@ -1,0 +1,592 @@
+"""Stage-boundary verifier: negative corpus, provenance, cache behavior.
+
+Every ``RV0xx`` code in ``diagnostics.CODES`` must fire on a minimal
+broken fixture (the negative corpus), with the right severity and a
+provenance chain pointing at the offending construct; the full benchmark
+matrix must stay clean end to end; ``eliminate_dead`` must strip exactly
+the RV002/RV004 findings' subjects without touching the schedule; and
+the ``GroupCache`` carry-over (pass-through groups, sharing's verified
+rebind) must never suppress a finding a fresh run would report.
+"""
+import pytest
+
+from repro.core import dataflow as D
+from repro.core import diagnostics, pipeline, sharing, verify, verilog
+from repro.core.affine import AExpr, Cond, MemDecl, Program
+from repro.core.calyx import (Cell, CIf, CPar, CRepeat, CSeq, Component,
+                              GEnable, Group)
+from repro.core.diagnostics import CODES, ERROR, WARNING
+from repro.core.rtl import (DpBlock, DpRegWrite, DpSelect, DpUnit, Fsm,
+                            FsmState, Netlist, RegInst, UnitInst)
+
+
+def _reg_cells(*regs):
+    return {f"reg_{r}": Cell(f"reg_{r}", "reg32") for r in regs}
+
+
+def _group(name, uops, cells=(), latency=2):
+    return Group(name, latency, list(cells), [], list(uops))
+
+
+def _comp(groups, control, cells=None):
+    cells = dict(cells or {})
+    for g in groups:
+        for c in g.cells:
+            cells.setdefault(c, Cell(c, "fp_add"))
+    return Component("t", cells, {g.name: g for g in groups}, control)
+
+
+def _ok_uops(reg="acc"):
+    """Minimal clean body: define a temp, latch it into a register, and
+    consume it (a register nothing reads is an RV012 dead write)."""
+    return [D.UConst(0, 1.0), D.URegWrite(reg, 0),
+            D.URegRead(1, reg),
+            D.UMemWrite("buf", [AExpr.const_(0)], 1, 1)]
+
+
+def codes_of(rep):
+    return {d.code for d in rep}
+
+
+def find(rep, code):
+    hits = [d for d in rep if d.code == code]
+    assert hits, f"{code} did not fire; got {[d.code for d in rep]}"
+    return hits[0]
+
+
+def _netlist(blocks, fsms, regs=(), units=()):
+    return Netlist("t", mems={}, banks={},
+                   regs={r: RegInst(f"reg_{r}", r) for r in regs},
+                   index_regs={}, units={u: UnitInst(u, "fp_add", 2)
+                                         for u in units},
+                   muxes=[], blocks={b.group: b for b in blocks},
+                   fsms=list(fsms))
+
+
+def _fsm(states, fid=0, start=0, binds=None):
+    return Fsm(fid, f"fsm{fid}", list(states), start, binds=binds or {})
+
+
+class TestNegativeCorpusIR:
+    """One broken component per IR-level code."""
+
+    def test_rv001_dangling_cell(self):
+        g = _group("g", _ok_uops(), cells=["ghost"])
+        comp = _comp([g], CSeq([GEnable("g")]),
+                     cells=_reg_cells("acc"))
+        del comp.cells["ghost"]
+        d = find(verify.verify_component(comp), "RV001")
+        assert d.severity == ERROR
+        assert "group:g" in d.provenance and "cell:ghost" in d.provenance
+
+    def test_rv001_dangling_unit_invocation(self):
+        g = _group("g", [D.UConst(0, 1.0),
+                         D.UAlu(1, "relu", 0, None, "ghost_unit"),
+                         D.URegWrite("acc", 1)])
+        comp = _comp([g], CSeq([GEnable("g")]), cells=_reg_cells("acc"))
+        d = find(verify.verify_component(comp), "RV001")
+        assert "ghost_unit" in d.message
+
+    def test_rv002_unused_cell(self):
+        g = _group("g", _ok_uops())
+        comp = _comp([g], CSeq([GEnable("g")]),
+                     cells={**_reg_cells("acc"),
+                            "lonely": Cell("lonely", "fp_mul")})
+        d = find(verify.verify_component(comp), "RV002")
+        assert d.severity == WARNING
+        assert "cell:lonely" in d.provenance
+
+    def test_rv003_undefined_group(self):
+        comp = _comp([_group("g", _ok_uops())],
+                     CSeq([GEnable("g"), GEnable("phantom")]),
+                     cells=_reg_cells("acc"))
+        d = find(verify.verify_component(comp), "RV003")
+        assert d.severity == ERROR
+        assert any(p.startswith("seq[1]") for p in d.provenance)
+
+    def test_rv004_unreachable_group(self):
+        comp = _comp([_group("g", _ok_uops()),
+                      _group("orphan", _ok_uops("other"))],
+                     CSeq([GEnable("g")]),
+                     cells=_reg_cells("acc", "other"))
+        d = find(verify.verify_component(comp), "RV004")
+        assert d.severity == WARNING
+        assert "group:orphan" in d.provenance
+
+    def test_rv005_if_missing_condition(self):
+        comp = _comp([_group("a", _ok_uops()), _group("b", _ok_uops())],
+                     CIf(1, GEnable("a"), GEnable("b")),
+                     cells=_reg_cells("acc"))
+        assert find(verify.verify_component(comp), "RV005").severity == ERROR
+
+    def test_rv006_negative_extent(self):
+        comp = _comp([_group("g", _ok_uops())],
+                     CRepeat(-2, GEnable("g"), var="i"),
+                     cells=_reg_cells("acc"))
+        find(verify.verify_component(comp), "RV006")
+
+    def test_rv006_pipelined_nongroup_body(self):
+        comp = _comp([_group("g", _ok_uops())],
+                     CRepeat(4, CSeq([GEnable("g")]), var="i", ii=1),
+                     cells=_reg_cells("acc"))
+        d = find(verify.verify_component(comp), "RV006")
+        assert "single group" in d.message
+
+    def test_rv007_empty_group(self):
+        comp = _comp([_group("g", [])], CSeq([GEnable("g")]))
+        d = find(verify.verify_component(comp), "RV007")
+        assert "group:g" in d.provenance
+
+    def test_rv008_undeclared_memory(self):
+        prog = Program("t", {"m": MemDecl("m", (8,))}, [])
+        g = _group("g", [D.UMemRead(0, "nope", [AExpr.const_(0)], 0),
+                         D.URegWrite("acc", 0)])
+        comp = _comp([g], CSeq([GEnable("g")]), cells=_reg_cells("acc"))
+        d = find(verify.verify_component(comp, prog), "RV008")
+        assert "uop[0]:UMemRead" in d.provenance
+
+    def test_rv008_bank_out_of_range(self):
+        prog = Program("t", {"m": MemDecl("m", (2, 4), banks=(2,))}, [])
+        g = _group("g", [D.UMemRead(0, "m", [AExpr.const_(7),
+                                             AExpr.const_(0)], 0),
+                         D.URegWrite("acc", 0)])
+        comp = _comp([g], CSeq([GEnable("g")]), cells=_reg_cells("acc"))
+        comp.meta["bank_factors"] = {"m": (2,)}
+        d = find(verify.verify_component(comp, prog), "RV008")
+        assert "bank index 7" in d.message
+
+    def test_rv009_unbound_loop_var(self):
+        g = _group("g", [D.UMemRead(0, "m", [AExpr.var("i")], 0),
+                         D.URegWrite("acc", 0)])
+        comp = _comp([g], CSeq([GEnable("g")]), cells=_reg_cells("acc"))
+        d = find(verify.verify_component(comp), "RV009")
+        assert "var:i" in d.provenance and "group:g" in d.provenance
+
+    def test_rv009_bound_by_enclosing_repeat_is_clean(self):
+        g = _group("g", [D.UMemRead(0, "m", [AExpr.var("i")], 0),
+                         D.URegWrite("acc", 0)])
+        comp = _comp([g], CRepeat(4, GEnable("g"), var="i"),
+                     cells={**_reg_cells("acc"),
+                            "idx_i": Cell("idx_i", "index")})
+        assert "RV009" not in codes_of(verify.verify_component(comp))
+
+
+class TestNegativeCorpusDataflow:
+    def test_rv010_use_before_def(self):
+        g = _group("g", [D.UAlu(1, "relu", 0, None, "u0"),
+                         D.URegWrite("acc", 1)], cells=["u0"])
+        comp = _comp([g], CSeq([GEnable("g")]), cells=None)
+        comp.cells.update(_reg_cells("acc"))
+        d = find(verify.verify_component(comp), "RV010")
+        assert "uop[0]:UAlu" in d.provenance
+
+    def test_rv011_read_before_any_write(self):
+        g = _group("g", [D.URegRead(0, "r"), D.URegWrite("out", 0)])
+        comp = _comp([g], CSeq([GEnable("g")]),
+                     cells=_reg_cells("r", "out"))
+        d = find(verify.verify_component(comp), "RV011")
+        assert d.severity == ERROR
+        assert "group:g" in d.provenance
+        assert "uop[0]:URegRead" in d.provenance
+
+    def test_rv011_write_on_other_par_arm_does_not_dominate(self):
+        w = _group("w", _ok_uops("r"))
+        r = _group("r", [D.URegRead(0, "r"), D.URegWrite("out", 0)])
+        comp = _comp([w, r], CPar([GEnable("w"), GEnable("r")]),
+                     cells=_reg_cells("r", "out"))
+        assert "RV011" in codes_of(verify.verify_component(comp))
+
+    def test_rv011_seq_write_dominates(self):
+        w = _group("w", _ok_uops("r"))
+        r = _group("r", [D.URegRead(0, "r"), D.URegWrite("out", 0)])
+        comp = _comp([w, r], CSeq([GEnable("w"), GEnable("r")]),
+                     cells=_reg_cells("r", "out"))
+        assert "RV011" not in codes_of(verify.verify_component(comp))
+
+    def test_rv011_if_join_intersects(self):
+        # only the then-arm writes: the read after the join is dirty
+        w = _group("w", _ok_uops("r"))
+        n = _group("n", _ok_uops("other"))
+        r = _group("r", [D.URegRead(0, "r"), D.URegWrite("out", 0)])
+        cond = Cond.cmp(AExpr.var("i"), "lt", 2)
+        comp = _comp(
+            [w, n, r],
+            CRepeat(4, CSeq([CIf(0, GEnable("w"), GEnable("n"), [], cond),
+                             GEnable("r")]), var="i"),
+            cells={**_reg_cells("r", "other", "out"),
+                   "idx_i": Cell("idx_i", "index")})
+        assert "RV011" in codes_of(verify.verify_component(comp))
+
+    def test_rv012_dead_register_write(self):
+        g = _group("g", [D.UConst(0, 1.0),
+                         D.URegWrite("never_read", 0)])
+        comp = _comp([g], CSeq([GEnable("g")]),
+                     cells=_reg_cells("never_read"))
+        d = find(verify.verify_component(comp), "RV012")
+        assert d.severity == WARNING
+        assert "uop[1]:URegWrite" in d.provenance
+
+    def test_rv013_write_write_race(self):
+        g = _group("g", [D.UConst(0, 1.0), D.UConst(1, 2.0),
+                         D.URegWrite("r", 0, off=1),
+                         D.URegWrite("r", 1, off=1)])
+        comp = _comp([g], CSeq([GEnable("g")]), cells=_reg_cells("r"))
+        d = find(verify.verify_component(comp), "RV013")
+        assert "cycle offset 1" in d.message
+
+    def test_rv014_temp_redefinition(self):
+        g = _group("g", [D.UConst(0, 1.0), D.UConst(0, 2.0),
+                         D.URegWrite("r", 0)])
+        comp = _comp([g], CSeq([GEnable("g")]), cells=_reg_cells("r"))
+        d = find(verify.verify_component(comp), "RV014")
+        assert "uop[1]:UConst" in d.provenance
+
+
+class TestNegativeCorpusHardware:
+    def test_rv020_port_conflict(self):
+        prog = Program("t", {"m": MemDecl("m", (8,))}, [])
+        g = _group("g", [D.UConst(0, 1.0),
+                         D.UMemWrite("m", [AExpr.const_(0)], 0, 3),
+                         D.UMemWrite("m", [AExpr.const_(1)], 0, 3),
+                         D.URegWrite("acc", 0)])
+        comp = _comp([g], CSeq([GEnable("g")]), cells=_reg_cells("acc"))
+        d = find(verify.verify_component(comp, prog), "RV020")
+        assert "cycle offset 3" in d.message
+
+    def test_rv020_broadcast_loads_are_clean(self):
+        prog = Program("t", {"m": MemDecl("m", (8,))}, [])
+        g = _group("g", [D.UMemRead(0, "m", [AExpr.const_(2)], 1),
+                         D.UMemRead(1, "m", [AExpr.const_(2)], 1),
+                         D.URegWrite("acc", 0),
+                         D.URegWrite("acc2", 1)])
+        comp = _comp([g], CSeq([GEnable("g")]),
+                     cells=_reg_cells("acc", "acc2"))
+        assert "RV020" not in codes_of(verify.verify_component(comp, prog))
+
+    def test_rv021_pool_across_par_arms(self):
+        a = _group("a", _ok_uops("ra"), cells=["shared_fp_add_0"])
+        b = _group("b", _ok_uops("rb"), cells=["shared_fp_add_0"])
+        comp = _comp([a, b], CPar([GEnable("a"), GEnable("b")]),
+                     cells={**_reg_cells("ra", "rb"),
+                            "shared_fp_add_0":
+                                Cell("shared_fp_add_0", "fp_add", users=2)})
+        d = find(verify.verify_component(comp), "RV021")
+        assert "par[0]+par[1]" in d.provenance
+
+    def test_rv021_pool_within_seq_is_clean(self):
+        a = _group("a", _ok_uops("ra"), cells=["shared_fp_add_0"])
+        b = _group("b", _ok_uops("rb"), cells=["shared_fp_add_0"])
+        comp = _comp([a, b], CSeq([GEnable("a"), GEnable("b")]),
+                     cells={**_reg_cells("ra", "rb"),
+                            "shared_fp_add_0":
+                                Cell("shared_fp_add_0", "fp_add", users=2)})
+        assert "RV021" not in codes_of(verify.verify_component(comp))
+
+    def test_rv022_ii_below_recurrence_floor(self):
+        # acc written at off 3 but consumed at off 0 -> floor 3; ii=1 lies
+        g = _group("g", [D.URegRead(0, "acc"),
+                         D.UAlu(1, "add", 0, 0, "u0", off=0),
+                         D.URegWrite("acc", 1, off=3)],
+                   cells=["u0"], latency=4)
+        comp = _comp([g], CRepeat(4, GEnable("g"), var="i", ii=1))
+        comp.cells.update(_reg_cells("acc"))
+        comp.cells["idx_i"] = Cell("idx_i", "index")
+        d = find(verify.verify_component(comp), "RV022")
+        assert "floor 3" in d.message
+
+    def test_rv022_modulo_reservation_violation(self):
+        prog = Program("t", {"m": MemDecl("m", (8,))}, [])
+        g = _group("g", [D.UMemRead(0, "m", [AExpr.var("i")], 0),
+                         D.UMemRead(1, "m", [AExpr.var("i")], 2),
+                         D.UAlu(2, "add", 0, 1, "u0", off=3),
+                         D.URegWrite("out", 2, off=4)],
+                   cells=["u0"], latency=5)
+        comp = _comp([g], CRepeat(4, GEnable("g"), var="i", ii=2))
+        comp.cells.update(_reg_cells("out"))
+        comp.cells["idx_i"] = Cell("idx_i", "index")
+        d = find(verify.verify_component(comp, prog), "RV022")
+        assert "modulo" in d.message
+
+    def test_rv023_loop_carried_memory_dependence(self):
+        prog = Program("t", {"m": MemDecl("m", (8,))}, [])
+        g = _group("g", [D.UMemRead(0, "m", [AExpr.var("i")], 0),
+                         D.UMemWrite("m", [AExpr.var("i")], 0, 1)],
+                   latency=2)
+        comp = _comp([g], CRepeat(4, GEnable("g"), var="i", ii=1))
+        comp.cells["idx_i"] = Cell("idx_i", "index")
+        d = find(verify.verify_component(comp, prog), "RV023")
+        assert "group:g" in d.provenance
+
+
+class TestNegativeCorpusNetlist:
+    def test_rv030_multi_driven_wire(self):
+        b = DpBlock("g", 2, [DpUnit(0, "u0", "relu", 0, None),
+                             DpUnit(0, "u0", "relu", 0, None)], [])
+        net = _netlist([b], [_fsm([FsmState(0, "group", cycles=2,
+                                            group="g", next=1),
+                                   FsmState(1, "done")])],
+                       units=["u0"])
+        rep = verify.verify_netlist(net)
+        d = find(rep, "RV030")
+        assert "wire:w0" in d.provenance
+
+    def test_rv030_register_driven_twice_same_offset(self):
+        b = DpBlock("g", 2, [DpUnit(0, "u0", "relu", 0, None),
+                             DpRegWrite("r", 0, off=1),
+                             DpRegWrite("r", 0, off=1)], [])
+        net = _netlist([b], [_fsm([FsmState(0, "group", cycles=2,
+                                            group="g", next=1),
+                                   FsmState(1, "done")])],
+                       regs=["r"], units=["u0"])
+        d = find(verify.verify_netlist(net), "RV030")
+        assert "driven twice" in d.message
+        # the self-reference in op[0] also surfaces as RV031
+        assert "RV031" in codes_of(verify.verify_netlist(net))
+
+    def test_rv031_forward_reference(self):
+        b = DpBlock("g", 2, [DpUnit(0, "u0", "relu", 1, None),
+                             DpUnit(1, "u0", "relu", 0, None)], [])
+        net = _netlist([b], [_fsm([FsmState(0, "group", cycles=2,
+                                            group="g", next=1),
+                                   FsmState(1, "done")])],
+                       units=["u0"])
+        d = find(verify.verify_netlist(net), "RV031")
+        assert "wire:w1" in d.provenance
+
+    def test_rv032_unreachable_state(self):
+        net = _netlist([], [_fsm([FsmState(0, "done"),
+                                  FsmState(1, "delay", cycles=1)])])
+        d = find(verify.verify_netlist(net), "RV032")
+        assert d.severity == WARNING
+        assert "state[1]:delay" in d.provenance
+
+    def test_rv033_transition_out_of_range(self):
+        net = _netlist([], [_fsm([FsmState(0, "delay", cycles=1, next=9),
+                                  FsmState(1, "done")])])
+        d = find(verify.verify_netlist(net), "RV033")
+        assert "state 9" in d.message
+
+    def test_rv033_loop_backedge_unbound_index(self):
+        net = _netlist([], [_fsm([FsmState(0, "delay", cycles=1,
+                                           loop=("i", 4, 0), next=1),
+                                  FsmState(1, "done")])])
+        d = find(verify.verify_netlist(net), "RV033")
+        assert "'i'" in d.message
+
+    def test_rv034_unresolvable_loop_var(self):
+        cond = Cond.cmp(AExpr.var("k"), "lt", 2)
+        b = DpBlock("g", 2, [DpUnit(0, "u0", "relu", 0, None),
+                             DpUnit(1, "u0", "relu", 0, None),
+                             DpSelect(2, cond, 0, 1)], [])
+        net = _netlist([b], [_fsm([FsmState(0, "group", cycles=2,
+                                            group="g", next=1),
+                                   FsmState(1, "done")])],
+                       units=["u0"])
+        d = find(verify.verify_netlist(net), "RV034")
+        assert "var:k" in d.provenance
+        # RV031 must also fire for w0 read in op[0] (self-reference)
+        assert find(verify.verify_netlist(net), "RV031")
+
+
+class TestNegativeCorpusVerilogLint:
+    def test_rv040_delay_control(self):
+        d = find_lint("module m;\nassign x = y;\n#5 foo;\nendmodule\n",
+                      "RV040")
+        assert "module:m" in d.provenance
+
+    def test_rv041_initial_outside_mem_init(self):
+        d = find_lint("module m;\ninitial begin\nx = 1;\nend\nendmodule\n",
+                      "RV041")
+        assert d.severity == ERROR
+
+    def test_rv042_multi_driver(self):
+        text = ("module m;\n"
+                "assign x = a;\n"
+                "assign x = b;\n"
+                "endmodule\n")
+        d = find_lint(text, "RV042")
+        assert "net:x" in d.provenance
+
+
+def find_lint(text, code):
+    findings = verilog.lint_diagnostics(text)
+    hits = [d for d in findings if d.code == code]
+    assert hits, f"{code} missing from {[d.code for d in findings]}"
+    return hits[0]
+
+
+class TestRegistryCoverage:
+    def test_every_code_has_a_negative_fixture(self):
+        """The corpus above exercises the full registry — this meta-test
+        keeps the two in sync when codes are added."""
+        covered = {
+            "RV001", "RV002", "RV003", "RV004", "RV005", "RV006",
+            "RV007", "RV008", "RV009", "RV010", "RV011", "RV012",
+            "RV013", "RV014", "RV020", "RV021", "RV022", "RV023",
+            "RV030", "RV031", "RV032", "RV033", "RV034",
+            "RV040", "RV041", "RV042",
+        }
+        assert covered == set(CODES)
+
+    def test_error_reports_raise_and_warnings_do_not(self):
+        g = _group("g", _ok_uops())
+        comp = _comp([g], CSeq([GEnable("g"), GEnable("phantom")]),
+                     cells=_reg_cells("acc"))
+        rep = verify.verify_component(comp)
+        with pytest.raises(diagnostics.VerificationError):
+            rep.raise_if_errors()
+        warn_only = _comp([_group("g", _ok_uops()),
+                           _group("orphan", _ok_uops("o2"))],
+                          CSeq([GEnable("g")]),
+                          cells=_reg_cells("acc", "o2"))
+        verify.verify_component(warn_only).raise_if_errors()  # no raise
+
+
+class TestPipelineIntegration:
+    def test_compiled_design_is_clean_and_stamped(self):
+        import repro.core.frontend as frontend
+        d = pipeline.compile_model(frontend.Linear(4, 4, bias=False),
+                                   [(2, 4)], factor=2, opt_level=2)
+        d.to_rtl()
+        stages = [r.stage for r in d.verify_reports]
+        assert stages[0] == "post-lower"
+        assert "post-sharing" in stages and "post-rtl" in stages
+        assert all(len(r) == 0 for r in d.verify_reports)
+        assert all(r.wall_us > 0 for r in d.verify_reports)
+
+    def test_verify_off_skips_boundaries(self):
+        import repro.core.frontend as frontend
+        d = pipeline.compile_model(frontend.Linear(4, 4, bias=False),
+                                   [(2, 4)], verify=False)
+        assert [r.stage for r in d.verify_reports
+                if r.stage != "post-rtl"] == []
+
+    def test_broken_artifact_fails_the_boundary(self):
+        """An unsound II written onto a compiled design is caught by a
+        re-verify — the checks run against the artifact, not the pass's
+        claims."""
+        import repro.core.frontend as frontend
+        d = pipeline.compile_model(frontend.Linear(4, 4, bias=False),
+                                   [(2, 4)], factor=2, opt_level=2)
+        comp = d.component
+        broken = False
+        for node in verify._walk_nodes(comp.control):
+            if isinstance(node, CRepeat) and node.ii > 1:
+                node.ii = 1     # below the floor the pass proved
+                broken = True
+        if not broken:
+            pytest.skip("no pipelined loop with ii > 1 in this design")
+        rep = verify.verify_component(comp, d.program, stage="re-verify")
+        assert "RV022" in codes_of(rep)
+
+
+class TestDeadElimination:
+    def _design(self):
+        g = _group("g", _ok_uops())
+        orphan = _group("orphan", _ok_uops("o2"))
+        comp = _comp([g, orphan], CSeq([GEnable("g")]),
+                     cells={**_reg_cells("acc", "o2"),
+                            "stray": Cell("stray", "fp_mul")})
+        return comp
+
+    def test_strips_exactly_the_findings_subjects(self):
+        comp = self._design()
+        out, removed = verify.eliminate_dead(comp)
+        assert removed["groups"] == ["orphan"]
+        assert set(removed["cells"]) == {"stray", "reg_o2"}
+        assert "orphan" not in out.groups and "stray" not in out.cells
+        assert out.control is comp.control
+
+    def test_clean_design_returned_unchanged(self):
+        comp = self._design()
+        out, _ = verify.eliminate_dead(comp)
+        again, removed = verify.eliminate_dead(out)
+        assert again is out
+        assert removed == {"groups": [], "cells": []}
+
+    def test_cycle_neutral(self):
+        from repro.core import estimator
+        comp = self._design()
+        before = estimator.cycles(comp)
+        out, _ = verify.eliminate_dead(comp)
+        assert estimator.cycles(out) == before
+
+
+class TestGroupCache:
+    def test_hit_skips_recheck_but_revalidates_cells(self):
+        g = _group("g", [D.UConst(0, 1.0),
+                         D.UAlu(1, "relu", 0, None, "u0"),
+                         D.URegWrite("acc", 1),
+                         D.URegRead(2, "acc"),
+                         D.UMemWrite("buf", [AExpr.const_(0)], 2, 1)],
+                   cells=["u0"])
+        comp = _comp([g], CSeq([GEnable("g")]), cells=_reg_cells("acc"))
+        cache = verify.GroupCache()
+        assert len(verify.verify_component(comp, cache=cache)) == 0
+        # same group object, cell table loses the ALU: the cached clean
+        # verdict must NOT mask the new dangling reference
+        smaller = Component("t", _reg_cells("acc"), comp.groups,
+                            comp.control)
+        rep = verify.verify_component(smaller, cache=cache)
+        assert "RV001" in codes_of(rep)
+
+    def test_carry_over_never_suppresses_fresh_findings(self):
+        """Boundary N clean, boundary N+1 same control/groups but a cell
+        vanished: the carried analyses must still surface the breakage."""
+        g = _group("g", [D.UConst(0, 1.0),
+                         D.UAlu(1, "relu", 0, None, "u0"),
+                         D.URegWrite("acc", 1),
+                         D.URegRead(2, "acc"),
+                         D.UMemWrite("buf", [AExpr.const_(0)], 2, 1)],
+                   cells=["u0"])
+        comp = _comp([g], CSeq([GEnable("g")]), cells=_reg_cells("acc"))
+        cache = verify.GroupCache()
+        assert len(verify.verify_component(comp, cache=cache)) == 0
+        popped = dict(comp.cells)
+        del popped["u0"]
+        comp2 = Component("t", popped, comp.groups, comp.control)
+        rep = verify.verify_component(comp2, cache=cache)
+        assert "RV001" in codes_of(rep)
+
+    def test_transfer_rebound_carries_verdicts(self):
+        import repro.core.frontend as frontend
+        d = pipeline.compile_model(frontend.Linear(4, 4, bias=False),
+                                   [(2, 4)], factor=2, share=True)
+        stages = {r.stage: r for r in d.verify_reports}
+        assert len(stages["post-sharing"]) == 0
+
+    def test_transfer_rebound_rejects_nonequivalent_rewrites(self):
+        """A 'sharing' rebind that changed an op must not inherit the
+        clean verdict — the cache re-checks the group from scratch."""
+        g = _group("g", [D.UConst(0, 1.0),
+                         D.UAlu(1, "relu", 0, None, "u0"),
+                         D.URegWrite("acc", 1)], cells=["u0"])
+        comp = _comp([g], CSeq([GEnable("g")]), cells=_reg_cells("acc"))
+        cache = verify.GroupCache()
+        verify.verify_component(comp, cache=cache)
+        hacked = Group("g", g.latency, ["pool0"], [],
+                       [D.UConst(0, 1.0),
+                        # not a pure rename: operand a changed to 9
+                        D.UAlu(1, "relu", 9, None, "pool0"),
+                        D.URegWrite("acc", 1)])
+        cache.transfer_rebound({"g": g}, {"g": hacked}, {"u0": "pool0"})
+        cells = {**_reg_cells("acc"), "pool0": Cell("pool0", "fp_add")}
+        comp2 = Component("t", cells, {"g": hacked}, comp.control)
+        rep = verify.verify_component(comp2, cache=cache)
+        assert "RV010" in codes_of(rep)   # the 9 is read before any def
+
+
+class TestSharingVerifierAgreement:
+    def test_share_cells_output_passes_rv021(self):
+        a = _group("a", [D.UConst(0, 1.0),
+                         D.UAlu(1, "add", 0, 0, "fa0"),
+                         D.URegWrite("ra", 1)], cells=["fa0"])
+        b = _group("b", [D.UConst(0, 1.0),
+                         D.UAlu(1, "add", 0, 0, "fa1"),
+                         D.URegWrite("rb", 1)], cells=["fa1"])
+        comp = _comp([a, b], CSeq([GEnable("a"), GEnable("b")]),
+                     cells=_reg_cells("ra", "rb"))
+        shared, report = sharing.share_cells(comp)
+        assert report.removed == 1
+        rep = verify.verify_component(shared)
+        assert "RV021" not in codes_of(rep)
