@@ -19,7 +19,23 @@ per-boundary ``DiagnosticReport.wall_us`` stamps) plus the finding count
 overhead at <15% of compile time (measured: ~13-14% across the full
 matrix for the five-boundary suite; the compile window is timed with
 the garbage collector paused so collector pauses landing inside a
-verify boundary cannot swing the ratio).  The rows land in ``BENCH_calyx.json``
+verify boundary cannot swing the ratio).
+
+Since schema 5 each row also runs the observability layer
+(``repro.core.trace`` / ``repro.core.profiler``): both simulators run a
+second time with tracing on and the profiled netlist's synthesized
+counter bank active, and the row records ``counters_match`` (the full
+differential — Calyx-sim stats == RTL-sim stats == both trace
+aggregates == hardware counter values == analytic attribution, exact
+for if-free designs), the per-cause ``stalls`` breakdown, per-port and
+per-unit ``occupancy``, the previously dropped dynamic counters
+(``fu_grants``/``serialized_arms``/``broadcast_reads``) as first-class
+columns, and the tracing-off vs tracing-on simulator wall clocks
+(``sim_wall_us``/``trace_wall_us``) so the perf gate can assert the
+disabled trace hook stays within its overhead budget
+(``--sim-wall-overhead``).  Any differential mismatch, or a lint
+violation in the profiled SystemVerilog, fails the section.  The rows
+land in ``BENCH_calyx.json``
 (override the path with ``CALYX_BENCH_OUT``) so the perf *and*
 netlist-size trajectory is tracked across PRs; CI uploads the file as a
 build artifact and gates on it (``scripts/check_perf_regression.py``
@@ -49,7 +65,8 @@ import warnings
 
 import numpy as np
 
-from repro.core import estimator, frontend, pipeline, verilog
+from repro.core import estimator, frontend, pipeline, profiler, trace, \
+    verilog
 
 # Smallest first — CI picks the leading two via CALYX_BENCH_DESIGNS.
 # Dims are divisible by every banking factor so the layout-mode
@@ -101,11 +118,29 @@ def run(emit, out_path: str | None = None) -> None:
                                 share=share, opt_level=opt)
                             d.to_rtl()   # lower (and verify) the netlist
                         compile_us = (time.perf_counter() - t0) * 1e6
+                        # the profiled lowering below appends a sixth
+                        # verify report outside the compile window; keep
+                        # the overhead ratio over the same five stages
+                        compile_reports = list(d.verify_reports)
+                        # tracing-off vs tracing-on Calyx-sim wall clock:
+                        # still gc-paused so a collection inside either
+                        # window can't fake a trace-hook overhead
+                        ts = time.perf_counter()
+                        outs, stats = d.simulate({"arg0": x})
+                        sim_wall_us = (time.perf_counter() - ts) * 1e6
+                        tr_sim = trace.Tracer()
+                        ts = time.perf_counter()
+                        _, stats_tr = d.simulate({"arg0": x},
+                                                 tracer=tr_sim)
+                        trace_wall_us = (time.perf_counter() - ts) * 1e6
                         if gc_was_on:
                             gc.enable()
-                        outs, stats = d.simulate({"arg0": x})
                         rtl_outs, rtl_stats = d.simulate_rtl({"arg0": x})
+                        tr_rtl = trace.Tracer()
+                        _, rtl_tr_stats = d.simulate_rtl(
+                            {"arg0": x}, tracer=tr_rtl, profile=True)
                         sv_text = d.emit_verilog()
+                        sv_text_prof = d.emit_verilog(profile=True)
                     except Exception as exc:   # keep filling the matrix
                         if gc_was_on:
                             gc.enable()
@@ -126,9 +161,18 @@ def run(emit, out_path: str | None = None) -> None:
                     rtl_bitexact = all(np.array_equal(a, b)
                                        for a, b in zip(rtl_outs, outs))
                     lint_errors = verilog.lint(sv_text)
+                    prof_lint_errors = verilog.lint(sv_text_prof)
+                    att = estimator.attribute(d.component)
+                    mism = profiler.counter_mismatches(
+                        stats_tr, rtl_tr_stats, tr_sim.events,
+                        tr_rtl.events, attribution=att,
+                        hw_counters=rtl_tr_stats.counters)
+                    stl = profiler.stall_breakdown(tr_rtl.events)
+                    occ = profiler.occupancy(tr_rtl.events,
+                                             rtl_tr_stats.cycles)
                     est = d.estimate
                     netlist = d.to_rtl().stats()
-                    verify_us = sum(r.wall_us for r in d.verify_reports)
+                    verify_us = sum(r.wall_us for r in compile_reports)
                     verify_findings = sum(len(r) for r in d.verify_reports)
                     pipelined = d.component.meta.get("pipelined") or []
                     rec = {
@@ -160,10 +204,22 @@ def run(emit, out_path: str | None = None) -> None:
                             1 for ln in sv_text.splitlines()
                             if ln.startswith("module ")),
                         "sv_loc": len(sv_text.splitlines()),
+                        "sv_loc_profiled": len(sv_text_prof.splitlines()),
                         "sv_lint_errors": len(lint_errors),
+                        "sv_lint_errors_profiled": len(prof_lint_errors),
+                        "counters_match": not mism,
+                        "attribution_exact": att.exact,
+                        "trace_events": len(tr_rtl.events),
+                        "sim_wall_us": round(sim_wall_us, 1),
+                        "trace_wall_us": round(trace_wall_us, 1),
+                        "fu_grants": sum(stats.fu_grants.values()),
+                        "serialized_arms": stats.serialized_arms,
+                        "broadcast_reads": stats.broadcast_reads,
+                        "stalls": stl,
+                        "occupancy": occ,
                         "compile_us": round(compile_us, 1),
                         "verify_us": round(verify_us, 1),
-                        "verify_stages": len(d.verify_reports),
+                        "verify_stages": len(compile_reports),
                         "verify_findings": verify_findings,
                         "sim": stats.as_dict(),
                         "rtl_sim": rtl_stats.as_dict(),
@@ -196,6 +252,17 @@ def run(emit, out_path: str | None = None) -> None:
                             f"{name} f{factor} share={share} o{opt}: "
                             f"emitted Verilog has {len(lint_errors)} lint "
                             f"violations (first: {lint_errors[0]})")
+                    if prof_lint_errors:
+                        failures.append(
+                            f"{name} f{factor} share={share} o{opt}: "
+                            f"profiled Verilog has "
+                            f"{len(prof_lint_errors)} lint violations "
+                            f"(first: {prof_lint_errors[0]})")
+                    if mism:
+                        failures.append(
+                            f"{name} f{factor} share={share} o{opt}: "
+                            f"observability differential mismatch "
+                            f"(first: {mism[0]})")
                     if verify_findings:
                         first = next(diag for r in d.verify_reports
                                      for diag in r)
@@ -219,7 +286,7 @@ def run(emit, out_path: str | None = None) -> None:
     out_path = out_path or os.environ.get("CALYX_BENCH_OUT",
                                           "BENCH_calyx.json")
     with open(out_path, "w") as f:
-        json.dump({"schema": 4,
+        json.dump({"schema": 5,
                    "generator": "benchmarks/calyx_bench.py",
                    "opt_geomean_speedup": round(geomean, 3),
                    "records": records}, f, indent=2)

@@ -46,12 +46,26 @@ four-way differential harness.
 (``repro.core.verify``) at every boundary the compile crosses and prints
 the per-stage diagnostic table — codes, severities, provenance chains;
 ``--no-verify`` skips it (the paper's original unchecked flow).
+
+Observability (``repro.core.trace`` / ``repro.core.profiler``):
+
+    PYTHONPATH=src python examples/compile_to_calyx.py --model ffnn \
+        --factor 4 --opt-level 2 --profile       # attribution report
+    PYTHONPATH=src python examples/compile_to_calyx.py --model ffnn \
+        --factor 2 --trace /tmp/ffnn.jsonl --vcd /tmp/ffnn.vcd
+
+``--profile`` runs both simulators with tracing plus the synthesized
+counter bank and the analytic attribution, cross-checks all levels for
+exact equality, and prints the flame table / occupancy / stall
+breakdown.  ``--trace PATH`` writes the netlist-level event trace as
+JSONL; ``--vcd PATH`` writes a GTKWave/Surfer-openable waveform of the
+group enables, controller states, and bank-port grants.
 """
 import argparse
 
 import numpy as np
 
-from repro.core import diagnostics, frontend, pipeline
+from repro.core import diagnostics, frontend, pipeline, profiler, trace
 
 MODELS = {
     "ffnn": (frontend.paper_ffnn, (1, 64)),
@@ -85,6 +99,13 @@ def main():
                          "the diagnostic table (default)")
     ap.add_argument("--no-verify", dest="verify", action="store_false",
                     help="skip stage-boundary verification")
+    ap.add_argument("--profile", action="store_true",
+                    help="trace both simulators, cross-check the counter "
+                         "levels, and print the attribution report")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="write the netlist-level event trace as JSONL")
+    ap.add_argument("--vcd", metavar="PATH", default=None,
+                    help="write a VCD waveform of the netlist-level trace")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
@@ -151,6 +172,27 @@ def main():
         print(f"  rtl: transitions={rstats.fsm_transitions} "
               f"groups={rstats.group_fires} reads={rstats.mem_reads} "
               f"writes={rstats.mem_writes} par_forks={rstats.par_forks}")
+    if args.profile:
+        x = np.random.default_rng(0).normal(size=shape).astype(np.float32)
+        prof = d.profile({"arg0": x})
+        print()
+        print(prof.report())
+        if prof.mismatches:
+            raise SystemExit(1)
+    if args.trace or args.vcd:
+        x = np.random.default_rng(0).normal(size=shape).astype(np.float32)
+        tracer = trace.Tracer()
+        d.simulate_rtl({"arg0": x}, tracer=tracer)
+        if args.trace:
+            with open(args.trace, "w") as f:
+                f.write(trace.to_jsonl(tracer.events))
+            print(f"  wrote {len(tracer.events)} events -> {args.trace}")
+        if args.vcd:
+            text = profiler.to_vcd(tracer.events, name=d.component.name)
+            with open(args.vcd, "w") as f:
+                f.write(text)
+            print(f"  wrote {len(text.splitlines())} VCD lines "
+                  f"-> {args.vcd}")
     if args.verify:
         print()
         print(diagnostics.render_table(d.verify_reports))

@@ -16,6 +16,16 @@ five-boundary suite measures ~13-14% across the full matrix, see the
 "Static verification" section of the README).  Older files without the
 stamps skip that check.
 
+Schema-5 files additionally stamp the tracing-off simulator wall clock
+per point (``sim_wall_us``); the gate fails if the new file's aggregate
+tracing-off sim time grew beyond ``--sim-wall-overhead`` relative to the
+baseline's — tracking the disabled trace hook's <2% overhead contract
+across PRs (the hook is a single ``tracer is not None`` branch by
+construction; the CI budget is looser than 2% because shared-runner
+wall clocks are noisy, but a hook creeping into the hot path shows up
+here as a step change).  The check is skipped when either file predates
+the stamp — schema-4 baselines are read forward-compatibly.
+
     PYTHONPATH=src python scripts/check_perf_regression.py \
         --baseline BENCH_calyx.json --new /tmp/bench_new.json
 """
@@ -29,11 +39,13 @@ from typing import Dict, Tuple
 Key = Tuple[str, int, bool, int]
 
 
-def load(path: str) -> Tuple[int, Dict[Key, int], Tuple[float, float]]:
+def load(path: str) -> Tuple[int, Dict[Key, int],
+                             Tuple[float, float], Dict[Key, float]]:
     with open(path) as f:
         data = json.load(f)
     schema = data.get("schema", 0)
     rows: Dict[Key, int] = {}
+    sim_wall: Dict[Key, float] = {}
     compile_us = verify_us = 0.0
     for rec in data.get("records", []):
         if "error" in rec or "cycles" not in rec:
@@ -43,7 +55,9 @@ def load(path: str) -> Tuple[int, Dict[Key, int], Tuple[float, float]]:
         rows[key] = int(rec["cycles"])
         compile_us += float(rec.get("compile_us", 0.0))
         verify_us += float(rec.get("verify_us", 0.0))
-    return schema, rows, (compile_us, verify_us)
+        if "sim_wall_us" in rec:            # schema 5+
+            sim_wall[key] = float(rec["sim_wall_us"])
+    return schema, rows, (compile_us, verify_us), sim_wall
 
 
 def main() -> int:
@@ -57,10 +71,14 @@ def main() -> int:
     ap.add_argument("--verify-overhead", type=float, default=0.15,
                     help="max verifier share of compile time over the new "
                          "file's matrix (default 15%%; schema 4+ only)")
+    ap.add_argument("--sim-wall-overhead", type=float, default=None,
+                    help="max relative growth of the aggregate tracing-off "
+                         "sim wall clock vs the baseline (schema 5+ on "
+                         "both sides; skipped when unset or unstamped)")
     args = ap.parse_args()
 
-    _, base, _ = load(args.baseline)
-    _, new, (compile_us, verify_us) = load(args.new)
+    _, base, _, base_sim_wall = load(args.baseline)
+    _, new, (compile_us, verify_us), new_sim_wall = load(args.new)
     regressions = []
     improved = 0
     for key, cycles in sorted(new.items()):
@@ -90,6 +108,23 @@ def main() -> int:
               f"(limit {args.verify_overhead:.0%}) {tag}")
         if ratio >= args.verify_overhead:
             overhead_fail = ratio
+    sim_wall_fail = None
+    shared = sorted(set(base_sim_wall) & set(new_sim_wall))
+    if args.sim_wall_overhead is not None and shared:
+        base_sum = sum(base_sim_wall[k] for k in shared)
+        new_sum = sum(new_sim_wall[k] for k in shared)
+        if base_sum > 0:
+            growth = (new_sum - base_sum) / base_sum
+            tag = "ok" if growth < args.sim_wall_overhead else "FAIL"
+            print(f"  sim wall clock (tracing off, {len(shared)} shared "
+                  f"points): {base_sum / 1e3:.1f}ms -> "
+                  f"{new_sum / 1e3:.1f}ms ({growth:+.1%}, limit "
+                  f"+{args.sim_wall_overhead:.0%}) {tag}")
+            if growth >= args.sim_wall_overhead:
+                sim_wall_fail = growth
+    elif args.sim_wall_overhead is not None:
+        print("  sim wall clock check skipped (no shared schema-5 "
+              "points)")
     if regressions:
         print(f"\nFAIL: {len(regressions)} point(s) regressed beyond "
               f"{args.tolerance:.0%}:")
@@ -99,6 +134,11 @@ def main() -> int:
     if overhead_fail is not None:
         print(f"\nFAIL: stage-boundary verifier costs {overhead_fail:.1%} "
               f"of compile time (limit {args.verify_overhead:.0%})")
+        return 1
+    if sim_wall_fail is not None:
+        print(f"\nFAIL: tracing-off sim wall clock grew "
+              f"{sim_wall_fail:+.1%} over the baseline (limit "
+              f"+{args.sim_wall_overhead:.0%})")
         return 1
     print(f"\nOK: no cycle regressions beyond {args.tolerance:.0%} "
           f"({improved} improved, {len(new)} points checked)")

@@ -1,0 +1,152 @@
+"""Tiny VCD well-formedness checker — the CI gate for profiler waveforms.
+
+Validates the structural rules any VCD consumer (GTKWave, Surfer)
+relies on, without needing either installed:
+
+* header order: declarations, then ``$enddefinitions``, then value
+  changes only;
+* ``$scope``/``$upscope`` balance and a ``$timescale``;
+* every ``$var`` has a kind, a positive width, a unique identifier, and
+  a reference name;
+* every value change uses a declared identifier, scalar changes are
+  ``0/1/x/z``, vector changes are ``b<binary>`` and fit the declared
+  width;
+* timestamps are non-negative, strictly increasing, and start at 0;
+* every declared signal has an initial value at time 0 (``$dumpvars``).
+
+    PYTHONPATH=src python scripts/check_vcd.py out.vcd [more.vcd ...]
+
+Exit status 0 iff every file passes; failures print one line per issue.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from typing import Dict, List
+
+_VAR_RE = re.compile(r"^\$var\s+(\w+)\s+(\d+)\s+(\S+)\s+(\S+)\s+\$end$")
+_TIME_RE = re.compile(r"^#(\d+)$")
+_SCALAR_RE = re.compile(r"^([01xzXZ])(\S+)$")
+_VECTOR_RE = re.compile(r"^b([01xzXZ]+)\s+(\S+)$")
+
+
+def check(text: str) -> List[str]:
+    errors: List[str] = []
+    widths: Dict[str, int] = {}
+    in_defs = True
+    scope_depth = 0
+    saw_timescale = False
+    saw_enddefs = False
+    last_time = -1
+    at_time0 = False
+    initialized: set = set()
+    in_dumpvars = False
+    for ln, raw in enumerate(text.splitlines(), 1):
+        line = raw.strip()
+        if not line:
+            continue
+        if in_defs:
+            if line.startswith("$timescale"):
+                saw_timescale = True
+            elif line.startswith("$scope"):
+                scope_depth += 1
+            elif line.startswith("$upscope"):
+                scope_depth -= 1
+                if scope_depth < 0:
+                    errors.append(f"line {ln}: $upscope without $scope")
+            elif line.startswith("$var"):
+                m = _VAR_RE.match(line)
+                if not m:
+                    errors.append(f"line {ln}: malformed $var: {line}")
+                    continue
+                _kind, width, ident, _name = m.groups()
+                if int(width) < 1:
+                    errors.append(f"line {ln}: non-positive width: {line}")
+                if ident in widths:
+                    errors.append(f"line {ln}: duplicate identifier "
+                                  f"{ident!r}")
+                widths[ident] = int(width)
+            elif line.startswith("$enddefinitions"):
+                saw_enddefs = True
+                in_defs = False
+                if scope_depth != 0:
+                    errors.append(f"line {ln}: unbalanced $scope nesting "
+                                  f"({scope_depth} open)")
+            continue
+        # value-change section
+        m = _TIME_RE.match(line)
+        if m:
+            t = int(m.group(1))
+            if t <= last_time:
+                errors.append(f"line {ln}: timestamp #{t} not increasing "
+                              f"(previous #{last_time})")
+            if last_time == -1 and t != 0:
+                errors.append(f"line {ln}: first timestamp is #{t}, "
+                              f"expected #0")
+            at_time0 = (last_time == -1 and t == 0)
+            last_time = t
+            continue
+        if line == "$dumpvars":
+            in_dumpvars = True
+            continue
+        if line == "$end" and in_dumpvars:
+            in_dumpvars = False
+            continue
+        if line.startswith("$comment"):
+            continue
+        sm = _SCALAR_RE.match(line)
+        vm = _VECTOR_RE.match(line)
+        if sm:
+            ident = sm.group(2)
+            if ident not in widths:
+                errors.append(f"line {ln}: change for undeclared id "
+                              f"{ident!r}")
+            elif widths[ident] != 1:
+                errors.append(f"line {ln}: scalar change for {ident!r} "
+                              f"of width {widths[ident]}")
+        elif vm:
+            bits, ident = vm.groups()
+            if ident not in widths:
+                errors.append(f"line {ln}: change for undeclared id "
+                              f"{ident!r}")
+            elif len(bits) > widths[ident]:
+                errors.append(f"line {ln}: {len(bits)}-bit value for "
+                              f"{ident!r} of width {widths[ident]}")
+        else:
+            errors.append(f"line {ln}: unparseable value change: {line}")
+            continue
+        if at_time0 or in_dumpvars:
+            initialized.add((sm or vm).group(2))
+    if not saw_timescale:
+        errors.append("missing $timescale")
+    if not saw_enddefs:
+        errors.append("missing $enddefinitions")
+    if not widths:
+        errors.append("no $var declarations")
+    missing = sorted(set(widths) - initialized)
+    if missing:
+        errors.append(f"signals without an initial value at #0: "
+                      f"{missing[:8]}")
+    return errors
+
+
+def main(paths: List[str]) -> int:
+    if not paths:
+        print("usage: check_vcd.py FILE.vcd [...]", file=sys.stderr)
+        return 2
+    status = 0
+    for path in paths:
+        with open(path) as f:
+            errors = check(f.read())
+        if errors:
+            status = 1
+            print(f"{path}: FAIL ({len(errors)} issue(s))")
+            for e in errors[:20]:
+                print(f"  {e}")
+        else:
+            print(f"{path}: OK")
+    return status
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -9,6 +9,14 @@ so the script doubles as a pre-commit / CI lint gate for a design:
     PYTHONPATH=src python scripts/lint_design.py --model ffnn --factor 2
     PYTHONPATH=src python scripts/lint_design.py --model attention \
         --factor 4 --opt-level 2 --no-share
+    PYTHONPATH=src python scripts/lint_design.py --model ffnn --factor 4 \
+        --profile        # + traced profiling run with counter cross-check
+
+``--profile`` additionally verifies the profiled netlist (the RV05x
+counter-bank checks), runs both simulators with tracing on a fixed
+random input, and fails if any level of the observability differential
+(stats, trace aggregates, hardware counter bank, analytic attribution)
+disagrees.
 
 Models: the four benchmark microdesigns (matmul, conv2d, ffnn,
 attention) plus the paper's cnn and mha.  A compile whose boundary check
@@ -40,6 +48,9 @@ def main() -> int:
     ap.add_argument("--no-share", action="store_true")
     ap.add_argument("--mode", choices=("layout", "branchy"),
                     default="layout")
+    ap.add_argument("--profile", action="store_true",
+                    help="also verify the profiled netlist (RV05x) and "
+                         "run the traced counter cross-check")
     args = ap.parse_args()
 
     builder, shape = MODELS[args.model]
@@ -53,6 +64,8 @@ def main() -> int:
                                    share=not args.no_share,
                                    opt_level=args.opt_level)
         d.to_rtl()
+        if args.profile:
+            d.to_rtl(profile=True)   # RV05x counter-bank checks
         reports = d.verify_reports
     except diagnostics.VerificationError as exc:
         print(diagnostics.render_table([exc.report]))
@@ -60,6 +73,18 @@ def main() -> int:
               f"{exc.report.stage}")
         return 1
     print(diagnostics.render_table(reports))
+    if args.profile:
+        import numpy as np
+        x = np.random.default_rng(0).normal(size=shape).astype(np.float32)
+        prof = d.profile({"arg0": x})
+        if prof.mismatches:
+            for m in prof.mismatches:
+                print(f"  counter mismatch: {m}")
+            print(f"\nFAIL: {len(prof.mismatches)} observability "
+                  f"mismatch(es)")
+            return 1
+        print(f"profile: {prof.cycles} cycles, counters agree across "
+              f"sim / rtl_sim / traces / hardware bank")
     errors = sum(len(r.errors()) for r in reports)
     warnings = sum(len(r.warnings()) for r in reports)
     if errors:

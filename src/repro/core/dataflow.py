@@ -142,21 +142,56 @@ def alu(op: str, a: float, b: Optional[float] = None) -> float:
     raise KeyError(op)
 
 
+def uop_detail(u: UOp) -> str:
+    """The trace descriptor of a micro-op (``trace.UOP`` event detail).
+
+    Chosen so the Calyx-level and netlist-level simulators produce equal
+    strings for the same operation: ``UAlu.cell`` equals the lowered
+    ``DpUnit.unit`` (post-sharing pool name), register and memory names
+    survive lowering unchanged.
+    """
+    if isinstance(u, UAlu):
+        return f"alu:{u.op}:{u.cell}"
+    if isinstance(u, UConst):
+        return "const"
+    if isinstance(u, URegRead):
+        return f"regrd:{u.reg}"
+    if isinstance(u, USelect):
+        return "select"
+    if isinstance(u, URegWrite):
+        return f"regwr:{u.reg}"
+    if isinstance(u, UMemRead):
+        return f"memrd:{u.mem}"
+    if isinstance(u, UMemWrite):
+        return f"memwr:{u.mem}"
+    raise TypeError(u)
+
+
+def uop_off(u: UOp) -> int:
+    """Cycle offset of a micro-op within its group's activation window
+    (0 for ops that carry no stamp: constants and register reads)."""
+    return getattr(u, "off", 0)
+
+
 def execute(uops: Sequence[UOp], env: Dict[str, int], regs: Dict[str, float],
             read_mem: Callable[[UMemRead], float],
             write_mem: Callable[[UMemWrite, float], None],
-            on_alu: Optional[Callable[[UAlu], None]] = None) -> int:
+            on_alu: Optional[Callable[[UAlu], None]] = None,
+            on_uop: Optional[Callable[[UOp], None]] = None) -> int:
     """Run one group activation; returns the micro-op count executed.
 
     ``read_mem`` / ``write_mem`` receive the micro-op itself so the caller
     can evaluate addresses against ``env``, track port occupancy, and touch
     its backing store.  Register state persists across activations through
-    ``regs``; temporaries do not.
+    ``regs``; temporaries do not.  ``on_uop`` (the trace hook) sees every
+    micro-op as it issues; it is None unless tracing is on.
     """
     tmp: Dict[int, float] = {}
     n = 0
     for u in uops:
         n += 1
+        if on_uop is not None:
+            on_uop(u)
         if isinstance(u, UConst):
             tmp[u.dst] = u.value
         elif isinstance(u, URegRead):

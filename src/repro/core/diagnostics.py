@@ -72,6 +72,10 @@ CODES: Dict[str, Tuple[str, str]] = {
     "RV040": ("delay control in emitted Verilog", ERROR),
     "RV041": ("initial block outside memory init", ERROR),
     "RV042": ("multi-driver net in emitted Verilog", ERROR),
+    # -- RV05x: observability (perf-counter bank) ----------------------
+    "RV050": ("perf counter references unknown group or unit", ERROR),
+    "RV051": ("perf counter address map malformed", ERROR),
+    "RV052": ("profiled netlist counter bank incomplete", ERROR),
 }
 
 

@@ -257,6 +257,119 @@ def cycles(comp: Component, node: Optional[CNode] = None) -> int:
 
 
 # ---------------------------------------------------------------------------
+# Cycle attribution (the analytic level of the observability differential)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class CycleAttribution:
+    """Closed-form counterpart of the perf-counter bank.
+
+    Predicts, without executing anything, the exact values the
+    synthesized hardware counters / both simulators' stats will measure:
+    per-group busy cycles, cycles lost to each stall cause, and control
+    overhead.  ``exact`` is False when the control tree contains an
+    ``if`` — the analysis charges the worst-case arm (the statically
+    timed FSM always *reserves* it, so ``total`` stays exact), but which
+    groups actually fire is input-dependent, so the per-group split is a
+    bound rather than an identity there.
+    """
+    total: int = 0
+    group_cycles: Dict[str, int] = dataclasses.field(default_factory=dict)
+    stall_port_cycles: int = 0       # par arms serialized behind siblings
+    stall_pool_cycles: int = 0       # waits on shared-unit pools (always 0:
+    #                                  binding keeps pools in one component)
+    stall_ii_cycles: int = 0         # (extent-1)*(ii-1) per pipelined loop
+    fsm_overhead_cycles: int = 0     # setup/iter/cond/pad/join states
+    pipe_launches: int = 0
+    exact: bool = True
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+    def counters(self) -> Dict[str, object]:
+        """Same shape as ``trace.aggregate`` / ``trace.counters_of_stats``
+        so the four-way differential compares dicts directly."""
+        return {
+            "total": self.total,
+            "group_cycles": dict(sorted(self.group_cycles.items())),
+            "stall_port_cycles": self.stall_port_cycles,
+            "stall_pool_cycles": self.stall_pool_cycles,
+            "stall_ii_cycles": self.stall_ii_cycles,
+            "fsm_overhead_cycles": self.fsm_overhead_cycles,
+            "pipe_launches": self.pipe_launches,
+        }
+
+
+def attribute(comp: Component,
+              node: Optional[CNode] = None) -> CycleAttribution:
+    """Attribute every cycle of :func:`cycles`'s total to a cause.
+
+    The invariant (asserted across the benchmark matrix): for if-free
+    designs the returned counters equal the Calyx-level ``SimStats``,
+    the netlist-level ``RtlStats``, and the synthesized counter bank,
+    field for field.
+    """
+    att = CycleAttribution()
+    att.total = cycles(comp, node)
+
+    def walk(n: CNode, mult: int) -> None:
+        if isinstance(n, GEnable):
+            g = comp.groups[n.group]
+            att.group_cycles[g.name] = \
+                att.group_cycles.get(g.name, 0) + g.latency * mult
+            return
+        if isinstance(n, CSeq):
+            for ch in n.children:
+                walk(ch, mult)
+            return
+        if isinstance(n, CRepeat):
+            if n.ii and n.extent > 0:
+                # pipelined loop (body is a single group, see
+                # pipelining.pipeline_loops): overlapped launch windows
+                # keep the group busy (extent-1)*ii + latency cycles
+                g = comp.groups[n.body.group]   # type: ignore[union-attr]
+                busy = (n.extent - 1) * n.ii + g.latency
+                att.group_cycles[g.name] = \
+                    att.group_cycles.get(g.name, 0) + busy * mult
+                att.fsm_overhead_cycles += F.LOOP_SETUP_CYCLES * mult
+                att.stall_ii_cycles += (n.extent - 1) * (n.ii - 1) * mult
+                att.pipe_launches += n.extent * mult
+                return
+            att.fsm_overhead_cycles += (
+                F.LOOP_SETUP_CYCLES
+                + n.extent * F.LOOP_ITER_OVERHEAD) * mult
+            walk(n.body, mult * n.extent)
+            return
+        if isinstance(n, CIf):
+            # statically timed: the FSM reserves max(arms), so charge the
+            # worst arm's groups — but which arm *fires* is runtime data
+            att.exact = False
+            att.fsm_overhead_cycles += \
+                (n.cond_latency + F.IF_SELECT_CYCLES) * mult
+            t, e = cycles(comp, n.then), cycles(comp, n.els)
+            walk(n.then if t >= e else n.els, mult)
+            return
+        if isinstance(n, CPar):
+            arms = n.children
+            if not arms:
+                return
+            att.fsm_overhead_cycles += par_join_cycles(len(arms)) * mult
+            for members in par_conflict_components(comp, n):
+                wait = 0
+                for i in members:
+                    att.stall_port_cycles += wait * mult
+                    wait += cycles(comp, arms[i])
+            for ch in arms:
+                walk(ch, mult)
+            return
+        raise TypeError(n)
+
+    walk(comp.control if node is None else node, 1)
+    return att
+
+
+# ---------------------------------------------------------------------------
 # Resources
 # ---------------------------------------------------------------------------
 

@@ -49,6 +49,25 @@ RTL-simulated ≡ Calyx-simulated ≡ affine-interpreted outputs bit-for-bit,
 all ≡ oracle within float tolerance, and both measured cycle counts ≡ the
 closed-form estimate with zero tolerance — asserted by the differential
 matrix in ``tests/test_core_rtl.py`` / ``tests/test_core_sim.py``.
+
+Observability hook points (``core.trace`` / ``core.profiler``):
+
+* ``simulate(inputs, tracer=Tracer())`` — canonical event trace at
+  micro-op granularity (group windows, uop issues, port grants, stalls);
+* ``simulate_rtl(inputs, tracer=Tracer(), profile=True)`` — the same
+  schema at netlist granularity (plus ``fsm:state`` events), join-able
+  event-for-event against the Calyx-level trace, with
+  ``RtlStats.counters`` modeling the synthesized counter bank per cycle;
+* ``to_rtl(profile=True)`` / ``emit_verilog(profile=True)`` — the
+  netlist/SystemVerilog with the hardware perf-counter bank, read over
+  the host bus at bank ``rtl.PROFILE_HOST_BANK``;
+* ``profile(inputs)`` — runs everything above plus
+  ``estimator.attribute`` and returns the joined ``profiler.Profile``
+  (flame table, occupancy, stall breakdown, four-way counter check).
+
+All hooks default off; the untraced paths allocate no event objects and
+build no provenance tuples (the <2% overhead contract the perf gate
+checks).
 """
 from __future__ import annotations
 
@@ -60,9 +79,11 @@ import numpy as np
 
 from . import affine, banking, calyx, chaining, estimator, frontend
 from . import pipelining, schedule, sharing
+from . import profiler
 from . import rtl as rtl_ir
 from . import rtl_sim
 from . import sim as calyx_sim
+from . import trace
 from . import tensor_ir as T
 from . import jax_backend
 from . import verify as verify_mod
@@ -86,8 +107,10 @@ class CompiledDesign:
     verify_reports: List[DiagnosticReport] = dataclasses.field(
         default_factory=list, repr=False, compare=False)
     verify_enabled: bool = True
-    _netlist: Optional[rtl_ir.Netlist] = dataclasses.field(
-        default=None, repr=False, compare=False)
+    # netlist cache, keyed by the profile flag (a profiled netlist adds
+    # the perf-counter bank; both variants are deterministic)
+    _netlists: Dict[bool, rtl_ir.Netlist] = dataclasses.field(
+        default_factory=dict, repr=False, compare=False)
 
     def _validate_inputs(self, inputs: Dict[str, np.ndarray]) -> None:
         """Check input names and shapes up front with a clear error.
@@ -120,7 +143,8 @@ class CompiledDesign:
         mems = affine.interpret(self.program, inputs, self.graph.params)
         return self._extract_outputs(mems)
 
-    def simulate(self, inputs: Dict[str, np.ndarray]
+    def simulate(self, inputs: Dict[str, np.ndarray],
+                 tracer: Optional[trace.Tracer] = None
                  ) -> Tuple[List[np.ndarray], "calyx_sim.SimStats"]:
         """Cycle-accurately execute the lowered Calyx component.
 
@@ -129,39 +153,53 @@ class CompiledDesign:
         returns ``(outputs, SimStats)`` where ``SimStats.cycles`` is the
         *measured* latency (equal to ``estimate.cycles`` by construction —
         asserted by the differential tests).
+
+        Trace hook: pass a ``trace.Tracer`` to record the canonical event
+        trace (group windows, micro-op issues, port grants, stalls) at
+        micro-op granularity; ``None`` (the default) keeps the simulator
+        on its zero-instrumentation path.
         """
         self._validate_inputs(inputs)
         mems, stats = calyx_sim.simulate(self.component, self.program,
-                                         inputs, self.graph.params)
+                                         inputs, self.graph.params,
+                                         tracer=tracer)
         return self._extract_outputs(mems), stats
 
     # -- RTL backend ----------------------------------------------------------
-    def to_rtl(self) -> rtl_ir.Netlist:
+    def to_rtl(self, profile: bool = False) -> rtl_ir.Netlist:
         """Lower the Calyx component to the FSM + datapath netlist
-        (cached — the netlist is deterministic for a compiled design).
-        When the design was compiled with ``verify=True`` the netlist is
-        statically checked at this boundary too (post-RTL: multi-driven
-        nets, combinational loops, FSM reachability)."""
-        if self._netlist is None:
-            net = rtl_ir.lower_component(self.component, self.program)
+        (cached per ``profile`` flag — both variants are deterministic
+        for a compiled design).  ``profile=True`` additionally
+        synthesizes the hardware perf-counter bank (``rtl.PerfCounter``)
+        read over the host bus.  When the design was compiled with
+        ``verify=True`` the netlist is statically checked at this
+        boundary too (post-RTL: multi-driven nets, combinational loops,
+        FSM reachability, and — profiled — the counter address map)."""
+        if profile not in self._netlists:
+            net = rtl_ir.lower_component(self.component, self.program,
+                                         profile=profile)
             if self.verify_enabled:
                 rep = verify_mod.verify_netlist(net)
                 self.verify_reports.append(rep)
                 rep.raise_if_errors()
-            self._netlist = net
-        return self._netlist
+            self._netlists[profile] = net
+        return self._netlists[profile]
 
-    def emit_verilog(self, path: Optional[str] = None) -> str:
+    def emit_verilog(self, path: Optional[str] = None,
+                     profile: bool = False) -> str:
         """Emit the netlist as SystemVerilog (structurally synthesizable;
         simulation-level FP cores with a HardFloat drop-in point);
-        optionally write it to ``path``.  Deterministic byte-for-byte."""
-        text = verilog.emit(self.to_rtl())
+        optionally write it to ``path``.  Deterministic byte-for-byte.
+        ``profile=True`` includes the synthesized perf-counter bank."""
+        text = verilog.emit(self.to_rtl(profile=profile))
         if path is not None:
             with open(path, "w") as f:
                 f.write(text)
         return text
 
-    def simulate_rtl(self, inputs: Dict[str, np.ndarray]
+    def simulate_rtl(self, inputs: Dict[str, np.ndarray],
+                     tracer: Optional[trace.Tracer] = None,
+                     profile: bool = False
                      ) -> Tuple[List[np.ndarray], "rtl_sim.RtlStats"]:
         """Execute the RTL netlist cycle-by-cycle (``core.rtl_sim``).
 
@@ -169,11 +207,25 @@ class CompiledDesign:
         memory banks, operand-muxed units — not the Calyx IR; outputs are
         bit-equal to ``simulate``/``run`` and ``RtlStats.cycles`` equals
         ``estimate.cycles`` exactly (the four-way differential contract).
+
+        Trace hook: a ``trace.Tracer`` records the same canonical event
+        schema ``simulate`` emits (plus netlist-only ``fsm:state``
+        events), with provenance keys that join event-for-event against
+        the Calyx-level trace.  ``profile=True`` runs the netlist that
+        carries the synthesized counter bank and fills
+        ``RtlStats.counters`` with the per-cycle hardware counter model.
         """
         self._validate_inputs(inputs)
-        mems, stats = rtl_sim.simulate(self.to_rtl(), inputs,
-                                       self.graph.params)
+        mems, stats = rtl_sim.simulate(self.to_rtl(profile=profile),
+                                       inputs, self.graph.params,
+                                       tracer=tracer)
         return self._extract_outputs(mems), stats
+
+    def profile(self, inputs: Dict[str, np.ndarray]) -> "profiler.Profile":
+        """Run both simulators with tracing plus the analytic attribution
+        and return the joined :class:`profiler.Profile` (flame table,
+        occupancy, stall breakdown, counter cross-check)."""
+        return profiler.profile_design(self, inputs)
 
     def _extract_outputs(self, mems: Dict[str, np.ndarray]
                          ) -> List[np.ndarray]:

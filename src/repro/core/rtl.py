@@ -47,8 +47,14 @@ from typing import Dict, List, Optional, Tuple
 from . import dataflow as D
 from . import estimator
 from . import float_lib as F
+from . import trace as T
 from .affine import Cond, Program
 from .calyx import (CIf, CNode, CPar, CRepeat, CSeq, Component, GEnable)
+
+# Host-bus bank id that selects the synthesized perf-counter bank
+# (profile=True netlists only).  Data banks are numbered 0..n-1, so the
+# top of the 16-bit bank space can never collide with one.
+PROFILE_HOST_BANK = 0xFFFF
 
 # Operand count per shareable/datapath unit kind — sizes the operand-mux
 # trees a pooled unit needs (one mux tree per operand).
@@ -201,6 +207,7 @@ class DpUnit(DpOp):
     a: int
     b: Optional[int]
     grant: int = -1           # slot in the unit's operand muxes; -1 = private
+    off: int = 0              # cycle offset at which the unit starts
 
 
 @dataclasses.dataclass
@@ -278,6 +285,17 @@ class FsmState:
     children: List[int] = dataclasses.field(default_factory=list)
     join_cycles: int = 0
     pipe: Optional[Tuple[str, int, int, int]] = None  # var, extent, ii, lat
+    # observability metadata (core.trace provenance discipline) — stamped
+    # at lowering time so the netlist simulator emits join-able events and
+    # the Verilog emitter can synthesize the stall counters:
+    prov: Tuple[str, ...] = ()
+    # entry state of a serialized par-chain member p>0: (arm path, p);
+    # the member waited behind its port-conflicting siblings
+    stall_arm: Optional[Tuple[Tuple[str, ...], int]] = None
+    # per-cycle port-stall weight: a chain member followed by w siblings
+    # delays each of them one cycle per cycle it occupies — summing
+    # w * residence over all states equals the serialization loss
+    stall_weight: int = 0
 
 
 @dataclasses.dataclass
@@ -289,6 +307,28 @@ class Fsm:
     parent: Optional[int] = None       # forking controller (None = root)
     binds: Dict[str, int] = dataclasses.field(default_factory=dict)
     # loop vars this controller owns -> extent (sizes the index counter)
+
+
+@dataclasses.dataclass
+class PerfCounter:
+    """One synthesized 64-bit hardware performance counter.
+
+    Counters live in their own host-bus bank (:data:`PROFILE_HOST_BANK`)
+    and are addressed by ``index`` over the existing handshake.  ``kind``:
+
+      * ``total``         — cycles with busy high and done low
+      * ``group``         — cycles the named ``group``'s go is high
+      * ``stall_port``    — par arms' serialization behind port conflicts
+      * ``stall_pool``    — shared-pool grant waits (0 by construction:
+        binding keeps a pool inside one serialized chain; the counter
+        exists so silicon can falsify that invariant)
+      * ``stall_ii``      — pipelined loops' inter-launch wait cycles
+      * ``fsm_overhead``  — control states (setup/iter/cond/pad/join)
+    """
+    index: int
+    name: str
+    kind: str
+    group: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -304,6 +344,8 @@ class Netlist:
     blocks: Dict[str, DpBlock]
     fsms: List[Fsm]            # fsms[0] is the root controller
     meta: Dict[str, object] = dataclasses.field(default_factory=dict)
+    counters: List[PerfCounter] = dataclasses.field(default_factory=list)
+    profile: bool = False      # synthesize the counter bank + host readout
 
     def stats(self) -> Dict[str, int]:
         """Netlist-size summary tracked by the benchmark across PRs."""
@@ -370,19 +412,29 @@ class _FsmBuilder:
             setattr(self.states[idx], field, target)
 
     # -- control-tree compilation -------------------------------------------
-    def build(self, node: CNode) -> Tuple[Optional[int], List[_Exit]]:
-        """Compile ``node``; return (entry state or None-if-empty, exits)."""
+    def build(self, node: CNode,
+              path: Tuple[str, ...] = ()) -> Tuple[Optional[int],
+                                                   List[_Exit]]:
+        """Compile ``node``; return (entry state or None-if-empty, exits).
+
+        ``path`` is the node's control-tree provenance chain, stamped onto
+        every created state (``FsmState.prov``) with exactly the labels
+        the Calyx-level simulator builds at run time (``core.trace``) —
+        the key discipline that makes the two simulators' traces join.
+        A state's prov excludes its group leaf: group-level events append
+        ``state.group`` themselves.
+        """
         comp = self.lower.comp
         if isinstance(node, GEnable):
             g = comp.groups[node.group]
             s = self.add("group", cycles=g.latency, group=g.name,
-                         label=g.name)
+                         label=g.name, prov=path)
             return s, [(s, "next")]
         if isinstance(node, CSeq):
             entry: Optional[int] = None
             exits: List[_Exit] = []
-            for ch in node.children:
-                e, x = self.build(ch)
+            for k, ch in enumerate(node.children):
+                e, x = self.build(ch, path + (T.seq_label(k),))
                 if e is None:
                     continue
                 if entry is None:
@@ -393,9 +445,13 @@ class _FsmBuilder:
             return entry, exits
         if isinstance(node, CRepeat):
             var = node.var or self.lower.fresh_counter()
+            # the trace label keeps the *source* loop var (empty-var loops
+            # share the generic label), never the fresh counter name — the
+            # Calyx simulator has no access to lowering-time gensyms
+            lpath = path + (T.loop_label(node.var),)
             self.binds[var] = max(self.binds.get(var, 0), node.extent)
             setup = self.add("delay", cycles=F.LOOP_SETUP_CYCLES,
-                             label="setup", set_idx=var)
+                             label="setup", set_idx=var, prov=lpath)
             if node.extent <= 0:
                 return setup, [(setup, "next")]
             if node.ii and not isinstance(node.body, GEnable):
@@ -408,13 +464,13 @@ class _FsmBuilder:
                 g = comp.groups[node.body.group]
                 total = (node.extent - 1) * node.ii + g.latency
                 ps = self.add("pipe", cycles=total, group=g.name,
-                              label=f"pipe ii={node.ii}",
+                              label=f"pipe ii={node.ii}", prov=lpath,
                               pipe=(var, node.extent, node.ii, g.latency))
                 self.patch([(setup, "next")], ps)
                 return setup, [(ps, "next")]
-            body_e, body_x = self.build(node.body)
+            body_e, body_x = self.build(node.body, lpath)
             it = self.add("delay", cycles=F.LOOP_ITER_OVERHEAD, label="iter",
-                          inc_idx=var)
+                          inc_idx=var, prov=lpath)
             head = body_e if body_e is not None else it
             self.states[it].loop = (var, node.extent, head)
             self.patch([(setup, "next")], head)
@@ -424,16 +480,19 @@ class _FsmBuilder:
         if isinstance(node, CIf):
             worst = max(estimator.cycles(comp, node.then),
                         estimator.cycles(comp, node.els))
+            ipath = path + (T.IF_LABEL,)
             cs = self.add("cond",
                           cycles=node.cond_latency + F.IF_SELECT_CYCLES,
-                          label="cond", cond=node.cond)
+                          label="cond", cond=node.cond, prov=ipath)
             exits: List[_Exit] = []
-            for arm, field in ((node.then, "then_state"),
-                               (node.els, "else_state")):
+            for arm, field, albl in ((node.then, "then_state", T.THEN_LABEL),
+                                     (node.els, "else_state", T.ELSE_LABEL)):
+                apath = ipath + (albl,)
                 pad = worst - estimator.cycles(comp, arm)
-                a_entry, a_exits = self.build(arm)
+                a_entry, a_exits = self.build(arm, apath)
                 if pad > 0:
-                    p = self.add("delay", cycles=pad, label="pad")
+                    p = self.add("delay", cycles=pad, label="pad",
+                                 prov=apath)
                     if a_entry is None:
                         a_entry = p
                     else:
@@ -449,18 +508,65 @@ class _FsmBuilder:
             arms = node.children
             if not arms:
                 return None, []
+            ppath = path + (T.PAR_LABEL,)
             comps = estimator.par_conflict_components(comp, node)
             children: List[int] = []
             for members in comps:
-                chain = CSeq([arms[i] for i in members])
-                children.append(self.lower.child_fsm(chain, self.fid))
+                chain = [(arms[i], ppath + (T.arm_label(i),))
+                         for i in members]
+                children.append(self.lower.child_fsm_chain(chain, self.fid))
             ps = self.add("par", label="par", children=children,
-                          join_cycles=estimator.par_join_cycles(len(arms)))
+                          join_cycles=estimator.par_join_cycles(len(arms)),
+                          prov=ppath)
             return ps, [(ps, "next")]
         raise TypeError(node)
 
-    def finish(self, node: CNode) -> Fsm:
-        entry, exits = self.build(node)
+    def build_chain(self, chain: List[Tuple[CNode, Tuple[str, ...]]]
+                    ) -> Tuple[Optional[int], List[_Exit]]:
+        """Compile one par conflict component: the member arms serialize
+        back to back, each keeping its own arm provenance.
+
+        Stall bookkeeping for the port-conflict serialization: member p's
+        states carry ``stall_weight = members_after_p`` (each of its
+        residence cycles delays that many siblings — summed over the run
+        this equals the cumulative-wait loss), and the entry state of
+        each delayed member records ``stall_arm = (arm_path, p)`` so the
+        netlist simulator can emit the event the Calyx simulator emits.
+        Nested controllers forked from inside a member are intentionally
+        left unstamped: the member's own (weighted) par state stays
+        resident while they run.
+        """
+        n = len(chain)
+        entry: Optional[int] = None
+        exits: List[_Exit] = []
+        for p, (node, apath) in enumerate(chain):
+            lo = len(self.states)
+            e, x = self.build(node, apath)
+            weight = n - 1 - p
+            if weight > 0:
+                for st in self.states[lo:]:
+                    st.stall_weight = weight
+            if e is None:
+                continue
+            if p > 0:
+                self.states[e].stall_arm = (apath, p)
+            if entry is None:
+                entry = e
+            else:
+                self.patch(exits, e)
+            exits = x
+        return entry, exits
+
+    def finish(self, node: CNode, path: Tuple[str, ...] = ()) -> Fsm:
+        entry, exits = self.build(node, path)
+        return self._seal(entry, exits)
+
+    def finish_chain(self,
+                     chain: List[Tuple[CNode, Tuple[str, ...]]]) -> Fsm:
+        entry, exits = self.build_chain(chain)
+        return self._seal(entry, exits)
+
+    def _seal(self, entry: Optional[int], exits: List[_Exit]) -> Fsm:
         dn = self.add("done", label="done")
         if entry is None:
             entry = dn
@@ -471,9 +577,11 @@ class _FsmBuilder:
 
 
 class _RtlLower:
-    def __init__(self, comp: Component, prog: Program):
+    def __init__(self, comp: Component, prog: Program,
+                 profile: bool = False):
         self.comp = comp
         self.prog = prog
+        self.profile = profile
         self.fsms: List[Optional[Fsm]] = []
         self._counter = 0
         # pooled unit -> group -> grant slot (first-use order)
@@ -484,9 +592,16 @@ class _RtlLower:
         self.fsms.append(None)
         return len(self.fsms) - 1
 
-    def child_fsm(self, node: CNode, parent: int) -> int:
+    def child_fsm(self, node: CNode, parent: int,
+                  path: Tuple[str, ...] = ()) -> int:
         builder = _FsmBuilder(self, parent)
-        self.fsms[builder.fid] = builder.finish(node)
+        self.fsms[builder.fid] = builder.finish(node, path)
+        return builder.fid
+
+    def child_fsm_chain(self, chain: List[Tuple[CNode, Tuple[str, ...]]],
+                        parent: int) -> int:
+        builder = _FsmBuilder(self, parent)
+        self.fsms[builder.fid] = builder.finish_chain(chain)
         return builder.fid
 
     def fresh_counter(self) -> str:
@@ -516,7 +631,8 @@ class _RtlLower:
                     grant = self.grant_slot(u.cell, gname)
                     if u.cell not in pooled:
                         pooled.append(u.cell)
-                ops.append(DpUnit(u.dst, u.cell, u.op, u.a, u.b, grant))
+                ops.append(DpUnit(u.dst, u.cell, u.op, u.a, u.b, grant,
+                                  u.off))
             elif isinstance(u, D.USelect):
                 ops.append(DpSelect(u.dst, u.cond, u.a, u.b, u.off))
             elif isinstance(u, D.URegWrite):
@@ -595,17 +711,41 @@ class _RtlLower:
 
         meta = dict(self.comp.meta)
         meta["component"] = self.comp.name
+        counters: List[PerfCounter] = []
+        if self.profile:
+            counters = perf_counter_bank(blocks)
         return Netlist(self.comp.name, mems, banks, regs, index_regs,
                        units, muxes, blocks,
-                       [f for f in self.fsms if f is not None], meta)
+                       [f for f in self.fsms if f is not None], meta,
+                       counters, self.profile)
 
 
-def lower_component(comp: Component, prog: Program) -> Netlist:
+def perf_counter_bank(blocks: Dict[str, DpBlock]) -> List[PerfCounter]:
+    """The canonical counter layout for a profiled netlist: index 0 is
+    the total-cycle counter, then one per group in block order, then the
+    four stall/overhead counters.  The layout is a function of the group
+    set alone so hosts can derive the address map from the design."""
+    counters = [PerfCounter(0, "perf_total", "total")]
+    for g in blocks:
+        counters.append(PerfCounter(len(counters), f"perf_g_{g}", "group",
+                                    group=g))
+    for kind in ("stall_port", "stall_pool", "stall_ii", "fsm_overhead"):
+        counters.append(PerfCounter(len(counters), f"perf_{kind}", kind))
+    return counters
+
+
+def lower_component(comp: Component, prog: Program,
+                    profile: bool = False) -> Netlist:
     """Lower a Calyx component (plus its program's memory declarations)
-    to the structural FSM + datapath netlist."""
+    to the structural FSM + datapath netlist.  ``profile=True`` also
+    synthesizes the hardware perf-counter bank (read over the host bus
+    at bank :data:`PROFILE_HOST_BANK`); the observability metadata on
+    the FSM states (provenance, stall weights) is stamped either way —
+    only the counter hardware is gated.
+    """
     for g in comp.groups.values():
         if not g.uops:
             raise ValueError(
                 f"[RV007] group {g.name} carries no micro-ops — re-lower "
                 f"with calyx.lower_program before the RTL backend")
-    return _RtlLower(comp, prog).run()
+    return _RtlLower(comp, prog, profile).run()

@@ -40,6 +40,7 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from . import dataflow as D
+from . import trace as T
 from .affine import pack_banked
 from .rtl import (DpBlock, DpConst, DpMemRead, DpMemWrite, DpRegRead,
                   DpRegWrite, DpSelect, DpUnit, Fsm, FsmState, Netlist)
@@ -62,6 +63,19 @@ class RtlStats:
     par_forks: int = 0                # par states entered (dynamic)
     child_activations: int = 0        # child FSMs launched
     unit_grants: Dict[str, int] = dataclasses.field(default_factory=dict)
+    # cycle-attribution counters — same fields as sim.SimStats; the
+    # observability differential asserts them equal level-for-level
+    group_cycles: Dict[str, int] = dataclasses.field(default_factory=dict)
+    stall_port_cycles: int = 0
+    stall_pool_cycles: int = 0
+    stall_ii_cycles: int = 0
+    fsm_overhead_cycles: int = 0
+    pipe_launches: int = 0
+    # profiled netlists only (net.profile): the per-cycle counter model
+    # that mirrors the synthesized Verilog counter conditions exactly —
+    # keys "total", "group:<g>", "stall_port", "stall_pool", "stall_ii",
+    # "fsm_overhead"
+    counters: Optional[Dict[str, int]] = None
 
     def as_dict(self) -> Dict[str, object]:
         return dataclasses.asdict(self)
@@ -100,7 +114,7 @@ class _FsmExec:
     """One live controller instance: state register + down-counter."""
 
     __slots__ = ("sim", "fsm", "scope", "state", "counter", "done", "phase",
-                 "children", "pipe_launched", "pipe_cd")
+                 "children", "pipe_launched", "pipe_cd", "t0")
 
     def __init__(self, sim: "_RtlSim", fsm: Fsm, parent: Optional[_Scope]):
         self.sim = sim
@@ -113,14 +127,30 @@ class _FsmExec:
         self.children: List["_FsmExec"] = []
         self.pipe_launched = 0              # pipe: iterations launched
         self.pipe_cd = 0                    # pipe: cycles to next launch
+        self.t0 = 0                         # activation cycle (stall base)
 
     # -- state entry ---------------------------------------------------------
     def activate(self, at_cycle: int) -> None:
+        self.t0 = at_cycle
         self._enter(self.fsm.states[self.fsm.start], at_cycle)
 
     def _enter(self, st: FsmState, at_cycle: int) -> None:
-        self.sim.stats.fsm_transitions += 1
+        stats = self.sim.stats
+        stats.fsm_transitions += 1
         self.state = st
+        tr = self.sim._tr
+        if tr is not None:
+            tr.emit(at_cycle, T.FSM_STATE, st.prov, st.group or "",
+                    f"{self.fsm.name}.{st.index}:{st.kind}", dur=st.cycles)
+        if st.stall_arm is not None:
+            # entry of a serialized par-chain member: everything since
+            # this controller's activation was waiting behind its
+            # port-conflicting siblings
+            wait = at_cycle - self.t0
+            stats.stall_port_cycles += wait
+            if tr is not None and wait > 0:
+                tr.emit(self.t0, T.STALL_PORT, st.stall_arm[0], dur=wait,
+                        data=(st.stall_arm[1],))
         if st.kind == "done":
             self.done = True
             return
@@ -131,8 +161,8 @@ class _FsmExec:
             self.children = [
                 _FsmExec(self.sim, self.sim.net.fsms[fid], self.scope)
                 for fid in st.children]
-            self.sim.stats.par_forks += 1
-            self.sim.stats.child_activations += len(self.children)
+            stats.par_forks += 1
+            stats.child_activations += len(self.children)
             self.sim.par_depth += 1
             for ch in self.children:
                 ch.activate(at_cycle)
@@ -140,18 +170,37 @@ class _FsmExec:
                 self.sim.par_exit()
                 self.phase = 1
                 self.counter = st.join_cycles
+                stats.fsm_overhead_cycles += st.join_cycles
+                if tr is not None:
+                    tr.emit(at_cycle, T.STALL_FSM, st.prov, detail="join",
+                            dur=st.join_cycles)
             return
         if st.kind == "pipe":
             # pipelined repeat: launch iteration 0 now (the setup state
             # zeroed the index), then one more every ii cycles in tick()
+            var, extent, ii, _lat = st.pipe
+            stats.group_cycles[st.group] = \
+                stats.group_cycles.get(st.group, 0) + st.cycles
+            stats.stall_ii_cycles += (extent - 1) * (ii - 1)
+            stats.pipe_launches += 1
+            if tr is not None:
+                tr.emit(at_cycle, T.PIPE_LAUNCH, st.prov, data=(0,))
             self.sim.pipe_depth += 1
-            self.sim.fire_group(st.group, at_cycle, self.scope)
+            self.sim.fire_group(st.group, at_cycle, self.scope, st.prov)
             self.pipe_launched = 1
-            self.pipe_cd = st.pipe[2]
+            self.pipe_cd = ii
             self.counter = st.cycles
             return
         if st.kind == "group":
-            self.sim.fire_group(st.group, at_cycle, self.scope)
+            stats.group_cycles[st.group] = \
+                stats.group_cycles.get(st.group, 0) + st.cycles
+            self.sim.fire_group(st.group, at_cycle, self.scope, st.prov)
+        elif st.kind in ("delay", "cond"):
+            # control overhead: loop setup/iterate, if cond/pad
+            stats.fsm_overhead_cycles += st.cycles
+            if tr is not None:
+                tr.emit(at_cycle, T.STALL_FSM, st.prov, detail=st.label,
+                        dur=st.cycles)
         self.counter = st.cycles
 
     # -- one clock edge ------------------------------------------------------
@@ -167,6 +216,10 @@ class _FsmExec:
                     self.sim.par_exit()
                     self.phase = 1
                     self.counter = st.join_cycles
+                    self.sim.stats.fsm_overhead_cycles += st.join_cycles
+                    if self.sim._tr is not None:
+                        self.sim._tr.emit(cycle + 1, T.STALL_FSM, st.prov,
+                                          detail="join", dur=st.join_cycles)
                 return
             self.counter -= 1
             if self.counter <= 0:
@@ -178,8 +231,17 @@ class _FsmExec:
             if self.pipe_launched < extent:
                 self.pipe_cd -= 1
                 if self.pipe_cd <= 0:
-                    self.scope.vars[var] = self.pipe_launched
-                    self.sim.fire_group(st.group, cycle + 1, self.scope)
+                    i = self.pipe_launched
+                    self.scope.vars[var] = i
+                    self.sim.stats.pipe_launches += 1
+                    if self.sim._tr is not None:
+                        self.sim._tr.emit(cycle + 1, T.PIPE_LAUNCH, st.prov,
+                                          data=(i,))
+                        if ii > 1:
+                            self.sim._tr.emit(cycle + 1, T.STALL_II,
+                                              st.prov, dur=ii - 1, data=(i,))
+                    self.sim.fire_group(st.group, cycle + 1, self.scope,
+                                        st.prov)
                     self.pipe_launched += 1
                     self.pipe_cd = ii
             if self.counter <= 0:
@@ -205,9 +267,10 @@ class _FsmExec:
 
 
 class _RtlSim:
-    def __init__(self, net: Netlist):
+    def __init__(self, net: Netlist, tracer: Optional[T.Tracer] = None):
         self.net = net
         self.stats = RtlStats()
+        self._tr = tracer                          # trace hook (None = off)
         self.banks: Dict[str, np.ndarray] = {}     # flat f64 word arrays
         self.regs: Dict[str, float] = {}
         self.par_depth = 0
@@ -314,41 +377,75 @@ class _RtlSim:
             self._unit_owner.clear()
 
     # -- datapath execution ----------------------------------------------------
-    def fire_group(self, gname: str, start: int, env: _Scope) -> None:
+    def fire_group(self, gname: str, start: int, env: _Scope,
+                   prov: Tuple[str, ...] = ()) -> None:
         if self.par_depth == 0 and self.pipe_depth == 0:
             # sequential flow: all stamped windows are strictly past
             self._ports.clear()
             self._unit_owner.clear()
         self.stats.group_fires += 1
         blk: DpBlock = self.net.blocks[gname]
+        tr = self._tr
+        gprov: Tuple[str, ...] = ()
+        if tr is not None:
+            gprov = prov + (gname,)
+            tr.emit(start, T.GROUP_START, gprov, gname, dur=blk.latency)
+            tr.emit(start + blk.latency, T.GROUP_STOP, gprov, gname)
         for uname in blk.pooled_units:
             self._claim_unit(uname, gname, start, blk.latency)
             self.stats.unit_grants[uname] = \
                 self.stats.unit_grants.get(uname, 0) + 1
+            if tr is not None:
+                tr.emit(start, T.POOL_GRANT, gprov, gname, detail=uname,
+                        dur=blk.latency)
         wires: Dict[int, float] = {}
         for op in blk.ops:
             self.stats.dp_ops += 1
             if isinstance(op, DpConst):
+                if tr is not None:
+                    tr.emit(start, T.UOP, gprov, gname, "const")
                 wires[op.dst] = op.value
             elif isinstance(op, DpRegRead):
+                if tr is not None:
+                    tr.emit(start, T.UOP, gprov, gname, f"regrd:{op.reg}")
                 wires[op.dst] = self.regs[op.reg]
             elif isinstance(op, DpMemRead):
                 bank, flat, vals = self._locate(op.mem, op.idxs, env)
                 self._claim_port(bank, start + op.off, False, vals)
                 self.stats.mem_reads += 1
+                if tr is not None:
+                    tr.emit(start + op.off, T.UOP, gprov, gname,
+                            f"memrd:{op.mem}")
+                    tr.emit(start + op.off, T.PORT_GRANT, gprov, gname,
+                            f"R:{op.mem}:b{self.net.banks[bank].index}",
+                            data=vals)
                 wires[op.dst] = float(self.banks[bank][flat])
             elif isinstance(op, DpUnit):
+                if tr is not None:
+                    tr.emit(start + op.off, T.UOP, gprov, gname,
+                            f"alu:{op.op}:{op.unit}")
                 b = None if op.b is None else wires[op.b]
                 wires[op.dst] = D.alu(op.op, wires[op.a], b)
             elif isinstance(op, DpSelect):
+                if tr is not None:
+                    tr.emit(start + op.off, T.UOP, gprov, gname, "select")
                 wires[op.dst] = wires[op.a] if op.cond.evaluate(env) \
                     else wires[op.b]
             elif isinstance(op, DpRegWrite):
+                if tr is not None:
+                    tr.emit(start + op.off, T.UOP, gprov, gname,
+                            f"regwr:{op.reg}")
                 self.regs[op.reg] = wires[op.src]
             elif isinstance(op, DpMemWrite):
                 bank, flat, vals = self._locate(op.mem, op.idxs, env)
                 self._claim_port(bank, start + op.off, True, vals)
                 self.stats.mem_writes += 1
+                if tr is not None:
+                    tr.emit(start + op.off, T.UOP, gprov, gname,
+                            f"memwr:{op.mem}")
+                    tr.emit(start + op.off, T.PORT_GRANT, gprov, gname,
+                            f"W:{op.mem}:b{self.net.banks[bank].index}",
+                            data=vals)
                 self.banks[bank][flat] = wires[op.src]
             else:
                 raise TypeError(op)
@@ -356,20 +453,64 @@ class _RtlSim:
     # -- clock loop ------------------------------------------------------------
     def run(self) -> int:
         root = _FsmExec(self, self.net.fsms[0], None)
+        counters: Optional[Dict[str, int]] = None
+        if self.net.profile:
+            counters = {_counter_key(c): 0 for c in self.net.counters}
         root.activate(0)                     # go handshake: launch at cycle 0
         cycle = 0
         while not root.done:
+            if counters is not None:
+                # evaluate the hardware counter-increment conditions on
+                # the settled pre-edge state — exactly what each
+                # synthesized always_ff samples at this rising edge
+                self._count_cycle(root, counters)
             root.tick(cycle)
             cycle += 1
+        if counters is not None:
+            self.stats.counters = counters
         return cycle                         # done rose after `cycle` cycles
+
+    # -- per-cycle counter model (mirrors verilog._emit_perf_counters) ---------
+    def _count_cycle(self, root: "_FsmExec", counters: Dict[str, int]) -> None:
+        counters["total"] += 1               # busy && !done: every run cycle
+        stack = [root]
+        while stack:
+            ex = stack.pop()
+            st = ex.state
+            if ex.done or st is None:
+                continue
+            if st.kind in ("group", "pipe"):
+                counters[f"group:{st.group}"] += 1      # g_<g>_go high
+                if st.kind == "pipe":
+                    var, extent, ii, _lat = st.pipe
+                    if ex.pipe_launched < extent and ex.pipe_cd > 1:
+                        counters["stall_ii"] += 1        # inter-launch wait
+            elif st.kind in ("delay", "cond"):
+                counters["fsm_overhead"] += 1
+            elif st.kind == "par":
+                if ex.phase == 1:
+                    counters["fsm_overhead"] += 1        # join reduction
+                else:
+                    stack.extend(ex.children)
+            if st.stall_weight:
+                # each resident cycle of this chain member delays
+                # stall_weight later siblings by one cycle
+                counters["stall_port"] += st.stall_weight
+        # stall_pool stays 0: binding keeps each shared pool inside one
+        # serialized chain, so the two-owners condition never fires
+
+
+def _counter_key(c) -> str:
+    return f"group:{c.group}" if c.kind == "group" else c.kind
 
 
 def simulate(net: Netlist, inputs: Dict[str, np.ndarray],
-             params: Dict[str, np.ndarray]
+             params: Dict[str, np.ndarray],
+             tracer: Optional[T.Tracer] = None
              ) -> Tuple[Dict[str, np.ndarray], RtlStats]:
     """Execute the netlist cycle-by-cycle; return (logical memories in
     their declared banked layout, measured :class:`RtlStats`)."""
-    sim = _RtlSim(net)
+    sim = _RtlSim(net, tracer)
     sim.load(inputs, params)
     sim.stats.cycles = sim.run()
     return sim.unload(), sim.stats

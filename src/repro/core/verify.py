@@ -1348,13 +1348,66 @@ def _check_reg_drivers(net: Netlist, rep: DiagnosticReport) -> None:
                         provenance=(f"fsm{fa}+fsm{fb}", f"reg:{reg}")))
 
 
+_COUNTER_KINDS = ("total", "stall_port", "stall_pool", "stall_ii",
+                  "fsm_overhead")
+
+
+def _check_counters(net: Netlist, rep: DiagnosticReport) -> None:
+    """Verify the profiled netlist's perf-counter bank (RV05x).
+
+    The host derives the counter address map from the design alone
+    (``rtl.perf_counter_bank``), so the bank must be structurally exact:
+    indices dense from zero, every group counter naming a real datapath
+    block, one ``total``, one counter per group, and each stall family
+    present exactly once.
+    """
+    counters = net.counters
+    idxs = [c.index for c in counters]
+    if idxs != list(range(len(counters))):
+        rep.add(diag("RV051",
+                     f"counter indices must be dense from 0 "
+                     f"(got {idxs})", provenance=("counters",)))
+    names = [c.name for c in counters]
+    if len(set(names)) != len(names):
+        dup = sorted({n for n in names if names.count(n) > 1})
+        rep.add(diag("RV051", f"duplicate counter names {dup}",
+                     provenance=("counters",)))
+    by_kind: Dict[str, int] = {}
+    for c in counters:
+        if c.kind not in _COUNTER_KINDS + ("group",):
+            rep.add(diag("RV051",
+                         f"counter {c.name!r} has unknown kind "
+                         f"{c.kind!r}", provenance=(f"counter:{c.name}",)))
+            continue
+        by_kind[c.kind] = by_kind.get(c.kind, 0) + 1
+        if c.kind == "group" and c.group not in net.blocks:
+            rep.add(diag("RV050",
+                         f"counter {c.name!r} references unknown group "
+                         f"{c.group!r}", provenance=(f"counter:{c.name}",)))
+    counted = {c.group for c in counters if c.kind == "group"}
+    missing = [g for g in net.blocks if g not in counted]
+    if missing:
+        rep.add(diag("RV052",
+                     f"groups without a counter: {missing}",
+                     provenance=("counters",)))
+    for kind in _COUNTER_KINDS:
+        if by_kind.get(kind, 0) != 1:
+            rep.add(diag("RV052",
+                         f"expected exactly one {kind!r} counter "
+                         f"(got {by_kind.get(kind, 0)})",
+                         provenance=("counters",)))
+
+
 def verify_netlist(net: Netlist, *,
                    stage: str = "post-rtl") -> DiagnosticReport:
     """Statically verify the FSM + datapath netlist (``core.rtl``) — the
     graph, not the emitted text (``verilog.lint_diagnostics`` covers
-    that)."""
+    that).  Profiled netlists additionally get their perf-counter bank
+    checked against the canonical address map (RV05x)."""
     with timed_report(stage) as rep:
         _check_fsms(net, rep)
+        if net.profile:
+            _check_counters(net, rep)
         gfids = net.group_fids()
         resolved: dict = {}
         # net.blocks is insertion-ordered by construction, so iteration

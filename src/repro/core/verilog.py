@@ -66,8 +66,9 @@ from typing import Dict, List, Optional, Tuple
 
 from . import diagnostics
 from .affine import AExpr, Cond, DivAtom, ModAtom, Var
-from .rtl import (DpBlock, DpConst, DpMemRead, DpMemWrite, DpRegRead,
-                  DpRegWrite, DpSelect, DpUnit, Netlist)
+from .rtl import (PROFILE_HOST_BANK, DpBlock, DpConst, DpMemRead,
+                  DpMemWrite, DpRegRead, DpRegWrite, DpSelect, DpUnit,
+                  Netlist)
 
 DATA_W = 64
 
@@ -329,6 +330,8 @@ class _Emitter:
         self._emit_index_regs()
         self._emit_group_go()
         self._emit_regs_decl()
+        if net.profile:
+            self._emit_perf_counters()
         self._emit_units()
         self._emit_banks()
         self._emit_datapath()
@@ -392,6 +395,116 @@ class _Emitter:
         self.w("  // data registers")
         for r in self.net.regs.values():
             self.w(f"  logic [{DATA_W - 1}:0] {r.name};")
+
+    # .. perf-counter bank (profile builds) .....................................
+    def _emit_perf_counters(self) -> None:
+        """Synthesize the cycle-attribution counter bank (``net.profile``).
+
+        One 64-bit counter per :class:`rtl.PerfCounter`, cleared on the
+        go edge (idle -> run) and read over the existing host bus at bank
+        ``PROFILE_HOST_BANK`` (see ``_emit_host_rdata``).  Every increment
+        condition samples exactly the pre-edge state the netlist
+        simulator's counter model (``rtl_sim._count_cycle``) evaluates,
+        so hardware readings equal trace aggregates cycle-for-cycle:
+
+        * ``total``        — ``busy && !done``;
+        * ``group``        — the group's existing ``g_<g>_go`` enable;
+        * ``stall_port``   — per-controller stall-weight mux over the
+          serialized par-chain states, summed across controllers;
+        * ``stall_pool``   — pairwise both-granted indicators over each
+          shared pool's user groups (never fires when the binding
+          invariant holds — the counter exists so silicon can falsify);
+        * ``stall_ii``     — pipe state with launches outstanding while
+          the modulo-II countdown is above one;
+        * ``fsm_overhead`` — delay/cond-state residence plus par join
+          reduction (par state with all child dones high).
+        """
+        net = self.net
+        self.w()
+        self.w("  // perf-counter bank (profile build): 64-bit counters,")
+        self.w("  // cleared at go, read back at host_bank == "
+               f"16'h{PROFILE_HOST_BANK:04x}")
+        for c in net.counters:
+            self.w(f"  logic [63:0] {c.name};")
+        ovh_terms: List[str] = []      # control-state residence indicators
+        stallw_terms: List[str] = []   # 32-bit per-controller stall weights
+        iis_terms: List[str] = []      # pipe inter-launch wait indicators
+        for f in net.fsms:
+            def eq(st) -> str:
+                return (f"(fsm{f.fid}_state == "
+                        f"{self.state_lp(f.fid, st.index)})")
+            delay = [eq(st) for st in f.states
+                     if st.kind in ("delay", "cond")]
+            if delay:
+                wn = f"perf_fsm{f.fid}_ovh"
+                self.w(f"  wire {wn} = {' || '.join(delay)};")
+                ovh_terms.append(f"32'({wn})")
+            for st in f.states:
+                if st.kind == "par":
+                    alldone = " && ".join(f"fsm{c}_done"
+                                          for c in st.children)
+                    wn = f"perf_fsm{f.fid}_join{st.index}"
+                    self.w(f"  wire {wn} = {eq(st)} && {alldone};")
+                    ovh_terms.append(f"32'({wn})")
+                elif st.kind == "pipe" and st.pipe[2] > 1:
+                    var, extent, _ii, _lat = st.pipe
+                    reg = net.index_regs[(f.fid, var)]
+                    wn = f"perf_fsm{f.fid}_iis{st.index}"
+                    self.w(f"  wire {wn} = {eq(st)} && "
+                           f"({reg.name} < 32'sd{extent - 1}) && "
+                           f"(fsm{f.fid}_pipe_cd > 32'd1);")
+                    iis_terms.append(f"32'({wn})")
+            weighted = [st for st in f.states if st.stall_weight]
+            if weighted:
+                expr = "32'd0"
+                for st in reversed(weighted):
+                    expr = f"{eq(st)} ? 32'd{st.stall_weight} : {expr}"
+                wn = f"perf_fsm{f.fid}_stallw"
+                self.w(f"  wire [31:0] {wn} = {expr};")
+                stallw_terms.append(wn)
+        pool_terms: List[str] = []
+        for unit, users in self.unit_users.items():
+            groups: List[str] = []
+            for g, _a, _b in users:
+                if g not in groups:
+                    groups.append(g)
+            for i in range(len(groups)):
+                for j in range(i + 1, len(groups)):
+                    pool_terms.append(
+                        f"32'(g_{groups[i]}_go && g_{groups[j]}_go)")
+        for name, terms in (("perf_ovh_inc", ovh_terms),
+                            ("perf_stallw_inc", stallw_terms),
+                            ("perf_iis_inc", iis_terms),
+                            ("perf_pool_inc", pool_terms)):
+            if terms:
+                self.w(f"  wire [31:0] {name} = {' + '.join(terms)};")
+        steps = {"total": ("busy && !done", "64'd1"),
+                 "stall_port": ("busy && !done" if stallw_terms else None,
+                                "64'(perf_stallw_inc)"),
+                 "stall_pool": ("busy && !done" if pool_terms else None,
+                                "64'(perf_pool_inc)"),
+                 "stall_ii": ("busy && !done" if iis_terms else None,
+                              "64'(perf_iis_inc)"),
+                 "fsm_overhead": ("busy && !done" if ovh_terms else None,
+                                  "64'(perf_ovh_inc)")}
+        clear = f"(fsm0_state == {self.idle_lp(0)}) && go"
+        for c in net.counters:
+            if c.kind == "group":
+                cond, step = f"g_{c.group}_go", "64'd1"
+            else:
+                cond, step = steps[c.kind]
+            self.w("  always_ff @(posedge clk) begin")
+            self.w("    if (reset) begin")
+            self.w(f"      {c.name} <= 64'd0;")
+            self.w("    end")
+            self.w(f"    else if ({clear}) begin")
+            self.w(f"      {c.name} <= 64'd0;")
+            self.w("    end")
+            if cond is not None:
+                self.w(f"    else if ({cond}) begin")
+                self.w(f"      {c.name} <= {c.name} + {step};")
+                self.w("    end")
+            self.w("  end")
 
     # .. datapath units .........................................................
     def _emit_units(self) -> None:
@@ -631,6 +744,20 @@ class _Emitter:
         self.w("  always_comb begin")
         self.w(f"    host_rdata = {DATA_W}'d0;")
         kw = "if"
+        if self.net.profile:
+            # the perf-counter bank answers on a reserved bank id; unlike
+            # the memory banks it reads plain registers, so the host may
+            # read it at any time (including while busy)
+            self.w(f"    if (host_bank == 16'h{PROFILE_HOST_BANK:04x}) "
+                   "begin")
+            ikw = "if"
+            for c in self.net.counters:
+                self.w(f"      {ikw} (host_addr == 32'd{c.index}) begin")
+                self.w(f"        host_rdata = {c.name};")
+                self.w("      end")
+                ikw = "else if"
+            self.w("    end")
+            kw = "else if"
         for k, bank in enumerate(self.net.banks.values()):
             self.w(f"    {kw} (host_bank == 16'd{k}) begin")
             self.w(f"      host_rdata = {bank.name}_rdata;")

@@ -1,0 +1,171 @@
+"""Observability layer: event traces, profiler, VCD, counter bank.
+
+The contract under test is the ISSUE's four-way differential — the
+Calyx-level simulator's stats, the RTL-level simulator's stats, both
+event-trace aggregates, the synthesized hardware counter bank, and the
+estimator's analytic attribution must agree *exactly* — plus the
+supporting surfaces: a committed golden trace that must stay
+byte-stable, a negative fixture whose induced port conflict surfaces as
+a ``stall:port`` event, VCD well-formedness (checked with the same tiny
+checker CI runs), deterministic lint-clean profiled Verilog, and the
+zero-cost-when-off guarantee that tracing never perturbs measurement.
+"""
+import importlib.util
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.core import (affine, calyx, estimator, frontend, pipeline,
+                        profiler, rtl, rtl_sim, schedule, sim, trace,
+                        verilog)
+
+_HERE = pathlib.Path(__file__).resolve().parent
+_GOLDEN = _HERE / "data" / "golden_trace_linear2_rtl.jsonl"
+
+_spec = importlib.util.spec_from_file_location(
+    "check_vcd", _HERE.parent / "scripts" / "check_vcd.py")
+check_vcd = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(check_vcd)
+
+
+def _tiny():
+    return pipeline.compile_model(frontend.Linear(2, 2, bias=False),
+                                  [(2, 2)], factor=1, share=True,
+                                  opt_level=0)
+
+
+def _x(shape, seed=0):
+    return np.random.default_rng(seed).normal(size=shape) \
+        .astype(np.float32)
+
+
+class TestGoldenTrace:
+    """The committed netlist-level trace of the smallest design is the
+    schema's regression anchor: any serialization, provenance-descent,
+    or event-ordering change shows up as a byte diff here."""
+
+    def test_rtl_trace_matches_committed_golden_bytes(self):
+        tr = trace.Tracer()
+        _tiny().simulate_rtl({"arg0": _x((2, 2))}, tracer=tr)
+        assert trace.to_jsonl(tr.events) == _GOLDEN.read_text()
+
+    def test_jsonl_round_trip(self):
+        events = trace.from_jsonl(_GOLDEN.read_text())
+        assert events and trace.to_jsonl(events) == _GOLDEN.read_text()
+
+    def test_tracing_never_perturbs_measurement(self):
+        """Zero-cost-when-off also means zero-effect-when-on: the traced
+        run must measure exactly what the untraced run measured."""
+        d = _tiny()
+        x = _x((2, 2))
+        _, plain = d.simulate({"arg0": x})
+        _, traced = d.simulate({"arg0": x}, tracer=trace.Tracer())
+        assert trace.counters_of_stats(plain) == \
+            trace.counters_of_stats(traced)
+        _, rplain = d.simulate_rtl({"arg0": x})
+        _, rtraced = d.simulate_rtl({"arg0": x}, tracer=trace.Tracer())
+        assert rplain.cycles == rtraced.cycles
+
+
+def _conflicting():
+    """Unbanked parallelized matmul: both par arms hit the same
+    single-ported memory, so the arms serialize — the induced port
+    conflict of the negative observability fixture."""
+    g = frontend.trace(frontend.Linear(8, 8, bias=False), [(4, 8)])
+    prog = schedule.restructure(
+        schedule.parallelize(affine.lower_graph(g), 2))
+    return calyx.lower_program(prog), prog, g
+
+
+class TestInducedPortConflict:
+    def test_serialized_arms_surface_as_stall_port_events(self):
+        comp, prog, g = _conflicting()
+        x = _x((4, 8), seed=1)
+        tr = trace.Tracer()
+        _, stats = sim.simulate(comp, prog, {"arg0": x}, g.params,
+                                tracer=tr)
+        assert stats.serialized_arms > 0
+        stalls = [e for e in tr.events if e.kind == trace.STALL_PORT]
+        assert stalls, "induced port conflict produced no stall:port"
+        assert all(e.dur > 0 for e in stalls)
+        # the events price the very loss the counter reports
+        agg = trace.aggregate(tr.events)
+        assert agg["stall_port_cycles"] == stats.stall_port_cycles > 0
+
+    def test_rtl_level_agrees_on_the_serialization_loss(self):
+        comp, prog, g = _conflicting()
+        x = _x((4, 8), seed=1)
+        tr_s, tr_r = trace.Tracer(), trace.Tracer()
+        _, stats = sim.simulate(comp, prog, {"arg0": x}, g.params,
+                                tracer=tr_s)
+        net = rtl.lower_component(comp, prog, profile=True)
+        _, rstats = rtl_sim.simulate(net, {"arg0": x}, g.params,
+                                     tracer=tr_r)
+        assert rstats.stall_port_cycles == stats.stall_port_cycles > 0
+        assert any(e.kind == trace.STALL_PORT for e in tr_r.events)
+        assert trace.join_mismatches(tr_s.events, tr_r.events) == []
+        # the synthesized counter bank prices the same loss
+        assert rstats.counters["stall_port"] == stats.stall_port_cycles
+
+
+# the tier-1 slice of the acceptance matrix: the cheap designs fully,
+# plus the if-bearing design (attribution exact=False, total-only);
+# benchmarks/calyx_bench.py enforces all 48 points
+_POINTS = [("matmul", 2, True, 0), ("matmul", 2, True, 2),
+           ("ffnn", 4, True, 2), ("ffnn", 1, False, 0),
+           ("conv2d", 2, False, 2), ("attention", 2, True, 2)]
+
+
+class TestFourWayDifferential:
+    @pytest.mark.parametrize("design,factor,share,opt", _POINTS)
+    def test_profile_agrees_across_all_levels(self, design, factor,
+                                              share, opt):
+        from benchmarks.calyx_bench import DESIGNS
+        builder, shape = DESIGNS[design]
+        d = pipeline.compile_model(builder(), [shape], factor=factor,
+                                   share=share, opt_level=opt)
+        prof = d.profile({"arg0": _x(shape)})
+        assert prof.mismatches == []
+        assert prof.hw_counters["total"] == prof.cycles \
+            == d.estimate.cycles
+        # the report renders without touching the mismatch list
+        assert str(prof.cycles) in prof.report()
+
+
+class TestVcdWellFormedness:
+    def test_generated_vcd_passes_the_ci_checker(self):
+        tr = trace.Tracer()
+        d = _tiny()
+        d.simulate_rtl({"arg0": _x((2, 2))}, tracer=tr)
+        text = profiler.to_vcd(tr.events, name=d.component.name)
+        assert check_vcd.check(text) == []
+
+    def test_checker_rejects_malformed_vcd(self):
+        tr = trace.Tracer()
+        d = _tiny()
+        d.simulate_rtl({"arg0": _x((2, 2))}, tracer=tr)
+        text = profiler.to_vcd(tr.events, name=d.component.name)
+        assert check_vcd.check(text.replace("$timescale 1ns $end\n", ""))
+        assert check_vcd.check("$enddefinitions $end\n#0\n")
+
+
+class TestProfiledVerilog:
+    def test_profiled_emission_is_deterministic_and_lint_clean(self):
+        d = pipeline.compile_model(frontend.paper_ffnn(), [(1, 64)],
+                                   factor=2, opt_level=2)
+        a = d.emit_verilog(profile=True)
+        b = d.emit_verilog(profile=True)
+        assert a == b
+        assert verilog.lint(a) == []
+        assert "perf_total" in a and "16'hffff" in a
+
+    def test_profile_off_emission_is_byte_identical(self):
+        """profile=False is the default and must cost nothing: emitting
+        the profiled netlist first must not leak into the plain text."""
+        d = pipeline.compile_model(frontend.paper_ffnn(), [(1, 64)],
+                                   factor=2, opt_level=2)
+        plain = d.emit_verilog()
+        d.emit_verilog(profile=True)
+        assert d.emit_verilog() == plain
+        assert "perf_total" not in plain

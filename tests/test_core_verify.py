@@ -16,8 +16,9 @@ from repro.core.affine import AExpr, Cond, MemDecl, Program
 from repro.core.calyx import (Cell, CIf, CPar, CRepeat, CSeq, Component,
                               GEnable, Group)
 from repro.core.diagnostics import CODES, ERROR, WARNING
-from repro.core.rtl import (DpBlock, DpRegWrite, DpSelect, DpUnit, Fsm,
-                            FsmState, Netlist, RegInst, UnitInst)
+from repro.core.rtl import (DpBlock, DpConst, DpRegWrite, DpSelect,
+                            DpUnit, Fsm, FsmState, Netlist, PerfCounter,
+                            RegInst, UnitInst, perf_counter_bank)
 
 
 def _reg_cells(*regs):
@@ -388,6 +389,78 @@ class TestNegativeCorpusNetlist:
         assert find(verify.verify_netlist(net), "RV031")
 
 
+def _profiled(counters=None):
+    """Minimal clean profiled netlist: one group block, one FSM, and a
+    counter bank (the canonical one unless a broken bank is injected)."""
+    b = DpBlock("g", 2, [DpConst(0, 1.0), DpRegWrite("r", 0, off=1)], [])
+    net = _netlist([b], [_fsm([FsmState(0, "group", cycles=2,
+                                        group="g", next=1),
+                               FsmState(1, "done")])],
+                   regs=["r"])
+    net.profile = True
+    net.counters = (counters if counters is not None
+                    else perf_counter_bank(net.blocks))
+    return net
+
+
+class TestNegativeCorpusCounters:
+    """RV05x: the profiled netlist's perf-counter bank must match the
+    canonical address map hosts derive from the design alone."""
+
+    def test_canonical_bank_is_clean(self):
+        rep = verify.verify_netlist(_profiled())
+        assert not codes_of(rep) & {"RV050", "RV051", "RV052"}
+
+    def test_unprofiled_netlist_skips_counter_checks(self):
+        net = _profiled(counters=[])     # empty bank would be RV052...
+        net.profile = False              # ...but the hardware is off
+        assert not codes_of(verify.verify_netlist(net)) & \
+            {"RV050", "RV051", "RV052"}
+
+    def test_rv050_counter_names_unknown_group(self):
+        net = _profiled()
+        net.counters[1] = PerfCounter(1, "perf_g_ghost", "group",
+                                      group="ghost")
+        d = find(verify.verify_netlist(net), "RV050")
+        assert d.severity == ERROR
+        assert "counter:perf_g_ghost" in d.provenance
+
+    def test_rv051_nondense_indices(self):
+        net = _profiled()
+        last = net.counters[-1]
+        net.counters[-1] = PerfCounter(last.index + 3, last.name,
+                                       last.kind)
+        d = find(verify.verify_netlist(net), "RV051")
+        assert "dense" in d.message
+
+    def test_rv051_unknown_kind(self):
+        net = _profiled()
+        net.counters.append(PerfCounter(len(net.counters), "perf_bogus",
+                                        "bogus"))
+        d = find(verify.verify_netlist(net), "RV051")
+        assert "counter:perf_bogus" in d.provenance
+
+    def test_rv051_duplicate_names(self):
+        net = _profiled()
+        net.counters.append(PerfCounter(len(net.counters), "perf_total",
+                                        "total"))
+        assert any("duplicate" in d.message
+                   for d in verify.verify_netlist(net)
+                   if d.code == "RV051")
+
+    def test_rv052_missing_stall_counter(self):
+        net = _profiled()
+        net.counters.pop()               # fsm_overhead is last: still dense
+        d = find(verify.verify_netlist(net), "RV052")
+        assert "fsm_overhead" in d.message
+
+    def test_rv052_group_without_counter(self):
+        bank = perf_counter_bank({})
+        net = _profiled(counters=bank)   # dense bank, but no group counter
+        d = find(verify.verify_netlist(net), "RV052")
+        assert "without a counter" in d.message
+
+
 class TestNegativeCorpusVerilogLint:
     def test_rv040_delay_control(self):
         d = find_lint("module m;\nassign x = y;\n#5 foo;\nendmodule\n",
@@ -425,6 +498,7 @@ class TestRegistryCoverage:
             "RV013", "RV014", "RV020", "RV021", "RV022", "RV023",
             "RV030", "RV031", "RV032", "RV033", "RV034",
             "RV040", "RV041", "RV042",
+            "RV050", "RV051", "RV052",
         }
         assert covered == set(CODES)
 
