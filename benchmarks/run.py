@@ -4,6 +4,7 @@ Prints ``name,us_per_call,derived`` CSV per line.  Sections:
   paper_tables      Fig 2 / Table 1 / Fig 3 / Table 2 reproduction
   banking_ablation  layout-vs-branchy, restructuring, port model, MoE HLO
   calyx_bench       simulator/estimator differential -> BENCH_calyx.json
+  serve_bench       serving load harness -> BENCH_serve.json
   kernel_bench      Pallas kernel microbenches (interpret mode)
   roofline_report   per-cell roofline terms from the dry-run artifacts
 """
@@ -20,8 +21,8 @@ def _emit(name: str, us_per_call: float, derived) -> None:
 
 def main() -> None:
     sections = sys.argv[1:] or ["paper_tables", "banking_ablation",
-                                "calyx_bench", "kernel_bench",
-                                "roofline_report"]
+                                "calyx_bench", "serve_bench",
+                                "kernel_bench", "roofline_report"]
     t0 = time.time()
     failures = []
     for section in sections:
@@ -36,6 +37,9 @@ def main() -> None:
             elif section == "calyx_bench":
                 from benchmarks import calyx_bench
                 calyx_bench.run(_emit)
+            elif section == "serve_bench":
+                from benchmarks import serve_bench
+                serve_bench.run(_emit)
             elif section == "kernel_bench":
                 from benchmarks import kernel_bench
                 kernel_bench.run(_emit)

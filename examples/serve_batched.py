@@ -1,12 +1,21 @@
 """End-to-end serving driver: batched prefill + decode with a KV cache.
 
     PYTHONPATH=src python examples/serve_batched.py --arch qwen2-0.5b \
-        --requests 4 --prompt-len 16 --gen 24
+        --requests 4 --prompt-len 16 --gen 24 \
+        --metrics-out /tmp/batched.prom --spans-out /tmp/batched.jsonl
 
 Serves the reduced config of any assigned architecture on CPU: a batch of
 requests is prefilled token-by-token into the cache, then decoded greedily.
 (The production path lowers the identical serve_step at decode_32k /
 long_500k shapes in the multi-pod dry-run.)
+
+All reported wall-clock numbers are taken after ``jax.block_until_ready``
+on the step outputs — jax dispatch is asynchronous, so stamping before the
+sync would time the *enqueue*, not the compute.  With ``--metrics-out`` /
+``--spans-out`` the driver additionally syncs per step and emits the same
+metric names and span schema as the continuous-batching engine
+(``repro.launch.serve``); the uninstrumented run keeps the original
+sync-at-phase-end behavior and pays nothing.
 """
 import argparse
 import time
@@ -15,8 +24,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.launch.serve import serve_metrics
 from repro.models import decode, get_config
 from repro.models import params as MP
+from repro.obs import MetricsRegistry, SpanTracer, spans as SP
 
 
 def main():
@@ -26,6 +37,13 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=24)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--metrics-out", default="",
+                    help="write the metrics registry here on exit "
+                         "(.json -> JSON, anything else -> Prometheus text)")
+    ap.add_argument("--spans-out", default="",
+                    help="write the span event stream here as JSONL")
+    ap.add_argument("--stable", action="store_true",
+                    help="normalize wall-clock fields in the span export")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
@@ -43,7 +61,16 @@ def main():
 
     cache = decode.init_cache(cfg, params, args.requests, max_len,
                               modality=modality)
-    step = jax.jit(lambda p, c, t, pos: decode.serve_step(cfg, p, c, t, pos))
+    step = decode.make_serve_step(cfg)
+
+    metrics = MetricsRegistry() if args.metrics_out else None
+    spans_tr = SpanTracer() if args.spans_out else None
+    observing = metrics is not None or spans_tr is not None
+    m = serve_metrics(metrics, cfg, args.requests, cache) \
+        if metrics is not None else None
+    now_us = spans_tr.now_us if spans_tr is not None \
+        else lambda t0=time.perf_counter(): int((time.perf_counter() - t0)
+                                                * 1e6)
 
     prompts = rng.integers(1, cfg.vocab_size,
                            size=(args.requests, args.prompt_len)).astype(
@@ -51,26 +78,98 @@ def main():
     print(f"arch={cfg.name} (reduced) requests={args.requests} "
           f"prompt={args.prompt_len} gen={args.gen}")
 
+    # every request is enqueued and admitted up front (fixed batch, one
+    # slot per request) — the spans still carry the full phase chain so
+    # the batched and continuous drivers export comparable streams
+    enqueue_us = now_us() if observing else 0
+    if spans_tr is not None:
+        for r in range(args.requests):
+            spans_tr.emit(SP.REQ_ENQUEUE, ts_us=enqueue_us,
+                          prov=SP.req_prov(r), step=0, rid=r)
+        for r in range(args.requests):
+            spans_tr.emit(SP.REQ_ADMIT, ts_us=enqueue_us,
+                          prov=SP.req_prov(r), step=0, rid=r, slot=r)
+            spans_tr.emit(SP.REQ_PREFILL, ts_us=enqueue_us,
+                          prov=SP.req_prov(r), step=0, rid=r, slot=r)
+    if m is not None:
+        m["enq"].inc(args.requests)
+        m["adm"].inc(args.requests)
+        m["occ"].set(args.requests)
+
+    def observe_step(idx, t_step, tokens_out, prefill_fed):
+        """Per-step sync + event/metric emission (instrumented runs only)."""
+        wall = int((time.perf_counter() - t_step) * 1e6)
+        if spans_tr is not None:
+            spans_tr.emit(SP.STEP, prov=SP.step_prov(idx), step=idx,
+                          dur_us=wall,
+                          data=(args.requests, 0, tokens_out, prefill_fed))
+        if m is not None:
+            m["steps"].inc()
+            m["gen"].inc(tokens_out)
+            m["pre"].inc(prefill_fed)
+            m["step_h"].observe(wall)
+
     # prefill (token-by-token through the decode path)
-    t0 = time.time()
+    t0 = time.perf_counter()
     logits = None
     for i in range(args.prompt_len):
+        t_step = time.perf_counter() if observing else 0.0
         logits, cache = step(params, cache, jnp.asarray(prompts[:, i:i + 1]),
                              jnp.asarray(i, jnp.int32))
+        if observing:
+            jax.block_until_ready(logits)
+            # the last prefill step's logits produce the first tokens
+            observe_step(i, t_step,
+                         args.requests if i == args.prompt_len - 1 else 0,
+                         args.requests)
     jax.block_until_ready(logits)
-    t_prefill = time.time() - t0
+    t_prefill = time.perf_counter() - t0
 
     # greedy decode
     outs = []
     tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
-    t0 = time.time()
+    if observing:
+        jax.block_until_ready(tok)
+        first_us = now_us()
+        if spans_tr is not None:
+            for r in range(args.requests):
+                spans_tr.emit(SP.REQ_FIRST_TOKEN, ts_us=first_us,
+                              prov=SP.req_prov(r),
+                              step=args.prompt_len - 1, rid=r, slot=r)
+        if m is not None:
+            for _ in range(args.requests):
+                m["ttft"].observe(first_us - enqueue_us)
+    t0 = time.perf_counter()
     for i in range(args.gen):
         outs.append(np.asarray(tok))
+        t_step = time.perf_counter() if observing else 0.0
         logits, cache = step(params, cache, tok,
                              jnp.asarray(args.prompt_len + i, jnp.int32))
         tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        if observing:
+            jax.block_until_ready(tok)
+            # the final iteration's freshly computed token is discarded
+            observe_step(args.prompt_len + i, t_step,
+                         args.requests if i < args.gen - 1 else 0,
+                         0)
     jax.block_until_ready(tok)
-    t_decode = time.time() - t0
+    t_decode = time.perf_counter() - t0
+
+    if observing:
+        done_us = now_us()
+        last_step = args.prompt_len + args.gen - 1
+        if spans_tr is not None:
+            for r in range(args.requests):
+                spans_tr.emit(SP.REQ_COMPLETE, ts_us=done_us,
+                              prov=SP.req_prov(r), step=last_step, rid=r,
+                              slot=r, detail=SP.FINISHED, data=(args.gen,))
+        if m is not None:
+            m["fin"].inc(args.requests)
+            m["occ"].set(0)
+            if args.gen >= 2:
+                for _ in range(args.requests):
+                    m["dtok"].observe((done_us - first_us)
+                                      / (args.gen - 1))
 
     gen = np.concatenate(outs, axis=1)
     tps = args.requests * args.gen / t_decode
@@ -79,6 +178,20 @@ def main():
     for r in range(min(args.requests, 2)):
         print(f"req{r}: prompt={prompts[r, :8].tolist()}... "
               f"generated={gen[r, :12].tolist()}...")
+    if metrics is not None:
+        with open(args.metrics_out, "w") as f:
+            f.write(metrics.dump_json()
+                    if args.metrics_out.endswith(".json")
+                    else metrics.to_prometheus())
+        print(f"metrics -> {args.metrics_out}")
+    if spans_tr is not None:
+        problems = SP.validate(spans_tr.events, slots=args.requests,
+                               engine_steps=args.prompt_len + args.gen)
+        assert not problems, problems
+        with open(args.spans_out, "w") as f:
+            f.write(SP.to_jsonl(spans_tr.events, stable=args.stable))
+        print(f"{len(spans_tr.events)} span events -> {args.spans_out}"
+              f"{' (stable)' if args.stable else ''}")
     assert np.isfinite(np.asarray(logits, np.float32)).all()
     print("OK")
 

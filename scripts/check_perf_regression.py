@@ -28,6 +28,22 @@ the stamp — schema-4 baselines are read forward-compatibly.
 
     PYTHONPATH=src python scripts/check_perf_regression.py \
         --baseline BENCH_calyx.json --new /tmp/bench_new.json
+
+The gate also covers ``BENCH_serve.json`` (the serving load harness,
+``benchmarks/serve_bench.py``) via ``--serve-baseline``/``--serve-new``:
+points are matched on (arch, profile) and fail when the new p99 TTFT
+grows — or tokens/sec shrinks — beyond ``--serve-tolerance`` (default
+3.0, i.e. 4x; latency quantiles of second-long CPU replays on shared
+runners are far noisier than cycle counts, so this catches order-of-
+magnitude breakage, not percent drift).  Independently of the baseline,
+every new serve point's ``trace_overhead`` (tracing-off vs tracing-on
+per-tick wall, measured in lockstep by the bench) must stay under
+``--serve-trace-overhead`` (default 5%), every point must be
+``deterministic`` and every request must have completed.  Either gate
+(calyx, serve) may be run alone by passing only its file pair.
+
+    PYTHONPATH=src python scripts/check_perf_regression.py \
+        --serve-baseline BENCH_serve.json --serve-new /tmp/serve_new.json
 """
 from __future__ import annotations
 
@@ -60,11 +76,63 @@ def load(path: str) -> Tuple[int, Dict[Key, int],
     return schema, rows, (compile_us, verify_us), sim_wall
 
 
+def load_serve(path: str) -> Dict[Tuple[str, str], dict]:
+    with open(path) as f:
+        data = json.load(f)
+    return {(rec["arch"], rec["profile"]): rec
+            for rec in data.get("records", [])}
+
+
+def check_serve(args) -> Tuple[list, list]:
+    """Returns (regressions, contract_failures) over the serve files."""
+    base = load_serve(args.serve_baseline) if args.serve_baseline else {}
+    new = load_serve(args.serve_new)
+    regressions = []
+    contract = []
+    for key, rec in sorted(new.items()):
+        ovh = float(rec.get("trace_overhead", 0.0))
+        tag = "ok" if ovh < args.serve_trace_overhead else "FAIL"
+        print(f"  serve {key}: trace_overhead={ovh:+.1%} "
+              f"(limit {args.serve_trace_overhead:.0%}) {tag}")
+        if ovh >= args.serve_trace_overhead:
+            contract.append(f"{key}: trace overhead {ovh:+.1%}")
+        if not rec.get("deterministic", False):
+            contract.append(f"{key}: span stream not deterministic")
+        if rec.get("completed") != rec.get("requests"):
+            contract.append(
+                f"{key}: {rec.get('completed')}/{rec.get('requests')} "
+                f"requests completed")
+        if key not in base:
+            if base:
+                print(f"  serve {key}: new point (no baseline)")
+            continue
+        ref = base[key]
+        tol = args.serve_tolerance
+        for metric, worse_is_bigger in (("ttft_us", True),
+                                        ("tokens_per_sec", False)):
+            new_v = rec["ttft_us"]["p99"] if worse_is_bigger \
+                else float(rec[metric])
+            ref_v = ref["ttft_us"]["p99"] if worse_is_bigger \
+                else float(ref[metric])
+            if ref_v <= 0:
+                continue
+            delta = (new_v - ref_v) / ref_v
+            bad = (new_v > ref_v * (1.0 + tol)) if worse_is_bigger \
+                else (new_v < ref_v / (1.0 + tol))
+            name = "ttft_p99" if worse_is_bigger else metric
+            print(f"  serve {key}: {name} {ref_v:.0f} -> {new_v:.0f} "
+                  f"({delta:+.1%}) {'REGRESSION' if bad else 'ok'}")
+            if bad:
+                regressions.append(f"{key}: {name} {delta:+.1%} beyond "
+                                   f"{tol:.0%} tolerance")
+    return regressions, contract
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--baseline", required=True,
+    ap.add_argument("--baseline",
                     help="committed BENCH_calyx.json")
-    ap.add_argument("--new", required=True,
+    ap.add_argument("--new",
                     help="freshly generated benchmark JSON")
     ap.add_argument("--tolerance", type=float, default=0.02,
                     help="allowed relative cycle growth (default 2%%)")
@@ -75,56 +143,80 @@ def main() -> int:
                     help="max relative growth of the aggregate tracing-off "
                          "sim wall clock vs the baseline (schema 5+ on "
                          "both sides; skipped when unset or unstamped)")
+    ap.add_argument("--serve-baseline",
+                    help="committed BENCH_serve.json")
+    ap.add_argument("--serve-new",
+                    help="freshly generated serve benchmark JSON")
+    ap.add_argument("--serve-tolerance", type=float, default=3.0,
+                    help="allowed relative p99-TTFT growth / tokens-per-sec "
+                         "shrink vs the serve baseline (default 3.0 = 4x; "
+                         "serve walls are cross-machine noisy)")
+    ap.add_argument("--serve-trace-overhead", type=float, default=0.05,
+                    help="max per-point tracing overhead in the new serve "
+                         "file (default 5%%)")
     args = ap.parse_args()
+    if bool(args.baseline) != bool(args.new):
+        ap.error("--baseline and --new must be given together")
+    if args.serve_baseline and not args.serve_new:
+        ap.error("--serve-baseline requires --serve-new")
+    if not args.new and not args.serve_new:
+        ap.error("give --baseline/--new and/or --serve-new")
 
-    _, base, _, base_sim_wall = load(args.baseline)
-    _, new, (compile_us, verify_us), new_sim_wall = load(args.new)
     regressions = []
     improved = 0
-    for key, cycles in sorted(new.items()):
-        if key not in base:
-            print(f"  new point (no baseline): {key} -> {cycles} cycles")
-            continue
-        ref = base[key]
-        delta = (cycles - ref) / ref if ref else 0.0
-        tag = "ok"
-        if cycles > ref * (1.0 + args.tolerance):
-            regressions.append((key, ref, cycles, delta))
-            tag = "REGRESSION"
-        elif cycles < ref:
-            improved += 1
-            tag = "improved"
-        print(f"  {key}: {ref} -> {cycles} cycles ({delta:+.1%}) {tag}")
-    missing = sorted(set(base) - set(new))
-    if missing:
-        print(f"  ({len(missing)} baseline points not regenerated — "
-              f"trimmed matrix)")
+    new = {}
     overhead_fail = None
-    if compile_us > 0 and verify_us > 0:
-        ratio = verify_us / compile_us
-        tag = "ok" if ratio < args.verify_overhead else "FAIL"
-        print(f"  verifier overhead: {verify_us / 1e3:.1f}ms of "
-              f"{compile_us / 1e3:.1f}ms compile = {ratio:.1%} "
-              f"(limit {args.verify_overhead:.0%}) {tag}")
-        if ratio >= args.verify_overhead:
-            overhead_fail = ratio
     sim_wall_fail = None
-    shared = sorted(set(base_sim_wall) & set(new_sim_wall))
-    if args.sim_wall_overhead is not None and shared:
-        base_sum = sum(base_sim_wall[k] for k in shared)
-        new_sum = sum(new_sim_wall[k] for k in shared)
-        if base_sum > 0:
-            growth = (new_sum - base_sum) / base_sum
-            tag = "ok" if growth < args.sim_wall_overhead else "FAIL"
-            print(f"  sim wall clock (tracing off, {len(shared)} shared "
-                  f"points): {base_sum / 1e3:.1f}ms -> "
-                  f"{new_sum / 1e3:.1f}ms ({growth:+.1%}, limit "
-                  f"+{args.sim_wall_overhead:.0%}) {tag}")
-            if growth >= args.sim_wall_overhead:
-                sim_wall_fail = growth
-    elif args.sim_wall_overhead is not None:
-        print("  sim wall clock check skipped (no shared schema-5 "
-              "points)")
+    if args.new:
+        _, base, _, base_sim_wall = load(args.baseline)
+        _, new, (compile_us, verify_us), new_sim_wall = load(args.new)
+        for key, cycles in sorted(new.items()):
+            if key not in base:
+                print(f"  new point (no baseline): {key} -> {cycles} "
+                      f"cycles")
+                continue
+            ref = base[key]
+            delta = (cycles - ref) / ref if ref else 0.0
+            tag = "ok"
+            if cycles > ref * (1.0 + args.tolerance):
+                regressions.append((key, ref, cycles, delta))
+                tag = "REGRESSION"
+            elif cycles < ref:
+                improved += 1
+                tag = "improved"
+            print(f"  {key}: {ref} -> {cycles} cycles ({delta:+.1%}) "
+                  f"{tag}")
+        missing = sorted(set(base) - set(new))
+        if missing:
+            print(f"  ({len(missing)} baseline points not regenerated — "
+                  f"trimmed matrix)")
+        if compile_us > 0 and verify_us > 0:
+            ratio = verify_us / compile_us
+            tag = "ok" if ratio < args.verify_overhead else "FAIL"
+            print(f"  verifier overhead: {verify_us / 1e3:.1f}ms of "
+                  f"{compile_us / 1e3:.1f}ms compile = {ratio:.1%} "
+                  f"(limit {args.verify_overhead:.0%}) {tag}")
+            if ratio >= args.verify_overhead:
+                overhead_fail = ratio
+        shared = sorted(set(base_sim_wall) & set(new_sim_wall))
+        if args.sim_wall_overhead is not None and shared:
+            base_sum = sum(base_sim_wall[k] for k in shared)
+            new_sum = sum(new_sim_wall[k] for k in shared)
+            if base_sum > 0:
+                growth = (new_sum - base_sum) / base_sum
+                tag = "ok" if growth < args.sim_wall_overhead else "FAIL"
+                print(f"  sim wall clock (tracing off, {len(shared)} "
+                      f"shared points): {base_sum / 1e3:.1f}ms -> "
+                      f"{new_sum / 1e3:.1f}ms ({growth:+.1%}, limit "
+                      f"+{args.sim_wall_overhead:.0%}) {tag}")
+                if growth >= args.sim_wall_overhead:
+                    sim_wall_fail = growth
+        elif args.sim_wall_overhead is not None:
+            print("  sim wall clock check skipped (no shared schema-5 "
+                  "points)")
+    serve_regressions, serve_contract = ([], [])
+    if args.serve_new:
+        serve_regressions, serve_contract = check_serve(args)
     if regressions:
         print(f"\nFAIL: {len(regressions)} point(s) regressed beyond "
               f"{args.tolerance:.0%}:")
@@ -140,8 +232,12 @@ def main() -> int:
               f"{sim_wall_fail:+.1%} over the baseline (limit "
               f"+{args.sim_wall_overhead:.0%})")
         return 1
-    print(f"\nOK: no cycle regressions beyond {args.tolerance:.0%} "
-          f"({improved} improved, {len(new)} points checked)")
+    if serve_regressions or serve_contract:
+        for msg in serve_regressions + serve_contract:
+            print(f"\nFAIL: serve {msg}")
+        return 1
+    print(f"\nOK: no regressions (calyx: {improved} improved, "
+          f"{len(new)} points checked)")
     return 0
 
 

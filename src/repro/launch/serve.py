@@ -1,17 +1,31 @@
 """Production serving launcher: continuous batched decode loop.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b \
-        --slots 4 --requests 12 --gen 16
+        --slots 4 --requests 12 --gen 16 \
+        --metrics-out /tmp/serve.prom --spans-out /tmp/serve_spans.jsonl
 
 Implements slot-based continuous batching over the family-appropriate
 cache: finished sequences release their slot, queued requests claim it, and
 every engine step decodes the whole batch.  (Per-slot cache reset uses a
 position mask, so one jitted serve_step serves the whole run — the same
 step the decode_32k / long_500k dry-run cells lower at production shape.)
+
+Observability (``repro.obs``): the engine accepts an optional
+``MetricsRegistry`` and ``SpanTracer``.  Every instrumentation site is
+guarded by ``if ... is not None`` — the uninstrumented engine pays nothing
+beyond the ``jax.block_until_ready`` it always performs (the step's argmax
+is transferred to the host each step regardless, so the sync is inherent to
+the serving loop, and making it explicit means *every* wall-clock stamp is
+taken after device work finished — async-dispatch timing lies are
+structurally impossible).  One span per request tracks the
+enqueue -> admit -> prefill -> first_token -> complete phase chain; one
+event per engine step carries slot occupancy, queue depth, and tokens
+emitted.  Under a fixed ``--seed`` the span stream is byte-identical across
+runs in the exporter's ``--stable`` mode (wall-clock fields normalized).
 """
 import argparse
 import time
-from typing import List, Optional
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -19,6 +33,7 @@ import numpy as np
 
 from repro.models import decode, get_config
 from repro.models import params as MP
+from repro.obs import MetricsRegistry, SpanTracer, spans as SP, traffic
 
 
 class Request:
@@ -27,51 +42,298 @@ class Request:
         self.prompt = prompt
         self.gen = gen
         self.out: List[int] = []
-        self.fed = 0          # prompt tokens consumed
+        self.fed = 0              # prompt tokens consumed
+        self.reason = ""          # set on completion
+        self.enqueue_us = -1      # engine-epoch stamps (observability only)
+        self.first_token_us = -1
+
+
+def serve_metrics(reg: MetricsRegistry, cfg, slots: int, cache) -> dict:
+    """Create (get-or-create) the serving instrument set on ``reg``.
+
+    Shared by the engine and the batch driver so every serving surface
+    exports the same metric names (see the README metric table).
+    """
+    st = decode.step_stats(cfg, cache)
+    reg.gauge("serve_slots_total", "configured engine slots").set(slots)
+    reg.gauge("serve_cache_bytes",
+              "bytes held by the decode cache").set(st["cache_bytes"])
+    reg.gauge("serve_cache_max_len",
+              "cache positions available").set(st["cache_max_len"])
+    reg.gauge("serve_approx_flops_per_token",
+              "2 x active params").set(st["approx_flops_per_token"])
+    return {
+        "enq": reg.counter("serve_requests_enqueued_total",
+                           "requests submitted to the queue"),
+        "adm": reg.counter("serve_requests_admitted_total",
+                           "requests that claimed a slot"),
+        "fin": reg.counter("serve_requests_completed_total",
+                           "requests finished normally"),
+        "trunc": reg.counter("serve_requests_truncated_total",
+                             "requests truncated before finishing"),
+        "steps": reg.counter("serve_engine_steps_total",
+                             "engine steps executed"),
+        "gen": reg.counter("serve_tokens_generated_total",
+                           "tokens decoded across all requests"),
+        "pre": reg.counter("serve_tokens_prefill_total",
+                           "prompt tokens fed through the decode path"),
+        "occ": reg.gauge("serve_slots_occupied",
+                         "slots occupied after the last admit/step"),
+        "qd": reg.gauge("serve_queue_depth", "requests waiting for a slot"),
+        "step_h": reg.histogram("serve_step_latency_us",
+                                "engine step wall time (post-sync)"),
+        "ttft": reg.histogram("serve_ttft_us",
+                              "enqueue to first generated token"),
+        "dtok": reg.histogram("serve_decode_token_us",
+                              "steady-state per-token decode latency"),
+    }
 
 
 class Engine:
     """Slot-based continuous batching on top of serve_step."""
 
-    def __init__(self, cfg, params, slots: int, max_len: int):
+    def __init__(self, cfg, params, slots: int, max_len: int,
+                 metrics: Optional[MetricsRegistry] = None,
+                 spans: Optional[SpanTracer] = None):
         self.cfg = cfg
         self.params = params
         self.slots: List[Optional[Request]] = [None] * slots
         self.pos = 0
         self.cache = decode.init_cache(cfg, params, slots, max_len)
         self.max_len = max_len
-        self._step = jax.jit(
-            lambda p, c, t, pos: decode.serve_step(cfg, p, c, t, pos))
+        self._step = decode.make_serve_step(cfg)
         self.steps = 0
+        self.queue: List[Request] = []
+        self.done: List[Request] = []
+        self.spans = spans
+        # one clock for every stamp: when a tracer is attached its epoch is
+        # the authoritative one (span events default to tracer time), so the
+        # metrics-side stamps must read the same clock or phase timestamps
+        # drift apart by the construction-time offset
+        self._t0 = time.perf_counter()
+        self._now_us = spans.now_us if spans is not None \
+            else self._own_now_us
+        self._m = serve_metrics(metrics, cfg, slots, self.cache) \
+            if metrics is not None else None
 
-    def admit(self, queue: List[Request]) -> None:
+    # -- observability helpers ----------------------------------------------
+
+    def _own_now_us(self) -> int:
+        return int((time.perf_counter() - self._t0) * 1e6)
+
+    @property
+    def inflight(self) -> int:
+        return sum(s is not None for s in self.slots)
+
+    # -- queue lifecycle -----------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+        if self.spans is not None or self._m is not None:
+            now = self._now_us()
+            req.enqueue_us = now
+            if self.spans is not None:
+                self.spans.emit(SP.REQ_ENQUEUE, ts_us=now,
+                                prov=SP.req_prov(req.rid), step=self.steps,
+                                rid=req.rid)
+            if self._m is not None:
+                self._m["enq"].inc()
+                self._m["qd"].set(len(self.queue))
+
+    def admit(self, queue: Optional[List[Request]] = None) -> None:
+        """Fill free slots from ``queue`` (default: the engine's own)."""
+        q = self.queue if queue is None else queue
         for i, slot in enumerate(self.slots):
-            if slot is None and queue:
-                self.slots[i] = queue.pop(0)
+            if slot is None and q:
+                r = q.pop(0)
+                self.slots[i] = r
+                if self.spans is not None:
+                    self.spans.emit(SP.REQ_ADMIT, prov=SP.req_prov(r.rid),
+                                    step=self.steps, rid=r.rid, slot=i)
+                if self._m is not None:
+                    self._m["adm"].inc()
+                    self._m["qd"].set(len(self.queue))
+                    self._m["occ"].set(self.inflight)
+
+    def _complete(self, i: int, reason: str) -> None:
+        r = self.slots[i]
+        assert r is not None
+        self.slots[i] = None
+        r.reason = reason
+        self.done.append(r)
+        if self.spans is not None:
+            self.spans.emit(SP.REQ_COMPLETE, prov=SP.req_prov(r.rid),
+                            step=self.steps, rid=r.rid, slot=i,
+                            detail=reason, data=(len(r.out),))
+        if self._m is not None:
+            m = self._m
+            (m["fin"] if reason == SP.FINISHED else m["trunc"]).inc()
+            m["occ"].set(self.inflight)
+            if len(r.out) >= 2 and r.first_token_us >= 0:
+                m["dtok"].observe((self._now_us() - r.first_token_us)
+                                  / (len(r.out) - 1))
+
+    def truncate_all(self, reason: str) -> None:
+        """Release every in-flight and queued request as truncated."""
+        detail = SP.TRUNCATED_PREFIX + reason
+        for i, r in enumerate(self.slots):
+            if r is not None:
+                self._complete(i, detail)
+        while self.queue:
+            r = self.queue.pop(0)
+            r.reason = detail
+            self.done.append(r)
+            if self.spans is not None:
+                self.spans.emit(SP.REQ_COMPLETE, prov=SP.req_prov(r.rid),
+                                step=self.steps, rid=r.rid, detail=detail,
+                                data=(len(r.out),))
+            if self._m is not None:
+                self._m["trunc"].inc()
+                self._m["qd"].set(len(self.queue))
+
+    # -- the engine step -----------------------------------------------------
 
     def step(self) -> None:
+        observing = self.spans is not None or self._m is not None
+        t0 = time.perf_counter() if observing else 0.0
         toks = np.zeros((len(self.slots), 1), np.int32)
+        prefill_started: List[int] = []
+        prefill_fed = 0
         for i, r in enumerate(self.slots):
             if r is None:
                 continue
             if r.fed < len(r.prompt):
+                if r.fed == 0:
+                    prefill_started.append(r.rid)
                 toks[i, 0] = r.prompt[r.fed]
                 r.fed += 1
+                prefill_fed += 1
             elif r.out:
                 toks[i, 0] = r.out[-1]
+        if self.spans is not None:
+            for rid in prefill_started:
+                self.spans.emit(SP.REQ_PREFILL, prov=SP.req_prov(rid),
+                                step=self.steps, rid=rid)
+        occupied = self.inflight
         logits, self.cache = self._step(self.params, self.cache,
                                         jnp.asarray(toks),
                                         jnp.asarray(self.pos, jnp.int32))
         nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)
+        # the argmax transfer above already forced the logits; block on the
+        # cache too so every wall-clock stamp below is post-device-sync
+        jax.block_until_ready(self.cache)
+        new_tokens = 0
+        first_token: List[int] = []
+        completed: List[int] = []
         for i, r in enumerate(self.slots):
             if r is None:
                 continue
             if r.fed >= len(r.prompt):
                 r.out.append(int(nxt[i]))
+                new_tokens += 1
+                if len(r.out) == 1:
+                    first_token.append(i)
                 if len(r.out) >= r.gen:
-                    self.slots[i] = None    # slot released
+                    completed.append(i)
+        if observing:
+            now = self._now_us()
+            wall_us = int((time.perf_counter() - t0) * 1e6)
+            for i in first_token:
+                r = self.slots[i]
+                assert r is not None
+                r.first_token_us = now
+                if self.spans is not None:
+                    self.spans.emit(SP.REQ_FIRST_TOKEN, ts_us=now,
+                                    prov=SP.req_prov(r.rid), step=self.steps,
+                                    rid=r.rid, slot=i)
+                if self._m is not None and r.enqueue_us >= 0:
+                    self._m["ttft"].observe(now - r.enqueue_us)
+        for i in completed:
+            self._complete(i, SP.FINISHED)
+        if self.spans is not None:
+            self.spans.emit(SP.STEP, prov=SP.step_prov(self.steps),
+                            step=self.steps, dur_us=wall_us,
+                            data=(occupied, len(self.queue), new_tokens,
+                                  prefill_fed))
+        if self._m is not None:
+            m = self._m
+            m["steps"].inc()
+            m["gen"].inc(new_tokens)
+            m["pre"].inc(prefill_fed)
+            m["occ"].set(self.inflight)
+            m["step_h"].observe(wall_us)
         self.pos += 1
         self.steps += 1
+
+    # -- drivers -------------------------------------------------------------
+
+    def run(self) -> None:
+        """Drain the queue and all in-flight work."""
+        while self.queue or self.inflight:
+            if self.pos >= self.max_len - 1:
+                self.truncate_all("max_len")
+                break
+            self.admit()
+            self.step()
+
+
+class ReplayDriver:
+    """Incremental replay of an arrival schedule: each request joins the
+    queue once the engine has executed its ``arrival_step`` steps (when
+    the engine goes idle the clock fast-forwards to the next arrival).
+
+    One :meth:`tick` is one scheduler round (submit due arrivals, admit,
+    step).  Exposing the replay one tick at a time lets the serve
+    benchmark drive an instrumented and an uninstrumented engine through
+    the identical schedule *interleaved tick-for-tick*, so its overhead
+    comparison pairs wall-clock samples taken milliseconds apart —
+    back-to-back full runs would be seconds apart and CPU load drift
+    swamps the signal.
+    """
+
+    def __init__(self, eng: Engine,
+                 arrivals: Sequence[Tuple[int, Request]]) -> None:
+        self.eng = eng
+        self.arrivals = arrivals
+        self._order = sorted(range(len(arrivals)),
+                             key=lambda j: (arrivals[j][0],
+                                            arrivals[j][1].rid))
+        self._i = 0
+
+    @property
+    def active(self) -> bool:
+        return (self._i < len(self.arrivals) or bool(self.eng.queue)
+                or bool(self.eng.inflight))
+
+    def _submit_due(self, all_remaining: bool = False) -> None:
+        eng = self.eng
+        while self._i < len(self.arrivals) and (
+                all_remaining
+                or self.arrivals[self._order[self._i]][0] <= eng.steps
+                or (not eng.inflight and not eng.queue)):
+            eng.submit(self.arrivals[self._order[self._i]][1])
+            self._i += 1
+
+    def tick(self) -> bool:
+        """One scheduler round; returns True if an engine step ran."""
+        if not self.active:
+            return False
+        eng = self.eng
+        self._submit_due()
+        if eng.pos >= eng.max_len - 1:
+            self._submit_due(all_remaining=True)
+            eng.truncate_all("max_len")
+            return False
+        eng.admit()
+        eng.step()
+        return True
+
+
+def replay(eng: Engine, arrivals: Sequence[Tuple[int, Request]]) -> None:
+    """Drive ``eng`` through an arrival schedule to completion."""
+    drv = ReplayDriver(eng, arrivals)
+    while drv.active:
+        drv.tick()
 
 
 def main():
@@ -82,39 +344,78 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--arrival-mean", type=float, default=0.0,
+                    help="Poisson mean inter-arrival gap in engine steps "
+                         "(0 = whole queue arrives up front)")
+    ap.add_argument("--metrics-out", default="",
+                    help="write the metrics registry here on exit "
+                         "(.json -> JSON, anything else -> Prometheus text)")
+    ap.add_argument("--spans-out", default="",
+                    help="write the span event stream here as JSONL")
+    ap.add_argument("--stable", action="store_true",
+                    help="normalize wall-clock fields in the span export "
+                         "(byte-identical across same-seed runs)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
     rng = np.random.default_rng(args.seed)
     params = MP.init_params(cfg, seed=args.seed)
-    max_len = (args.prompt_len + args.gen) * (
-        1 + args.requests // args.slots) + 8
+    per_req = args.prompt_len + args.gen
+    if args.arrival_mean > 0:
+        # spread arrivals stretch the schedule; budget for a serial tail
+        max_len = per_req * args.requests + 8
+    else:
+        max_len = per_req * (1 + args.requests // args.slots) + 8
 
-    queue = [Request(i, rng.integers(1, cfg.vocab_size,
-                                     size=args.prompt_len).astype(np.int32),
-                     args.gen)
-             for i in range(args.requests)]
-    done: List[Request] = []
-    eng = Engine(cfg, params, args.slots, max_len)
+    trace = traffic.synth_trace(args.seed, args.requests, args.arrival_mean,
+                                [args.prompt_len], [args.gen])
+    arrivals = [(t.arrival_step,
+                 Request(t.rid,
+                         rng.integers(1, cfg.vocab_size,
+                                      size=t.prompt_len).astype(np.int32),
+                         t.gen_len))
+                for t in trace]
 
-    t0 = time.time()
-    inflight = lambda: sum(s is not None for s in eng.slots)
-    while queue or inflight():
-        eng.admit(queue)
-        before = [s for s in eng.slots]
-        eng.step()
-        for prev, cur in zip(before, eng.slots):
-            if prev is not None and cur is None:
-                done.append(prev)
-        if eng.pos >= max_len - 1:
-            break
-    dt = time.time() - t0
-    total_tokens = sum(len(r.out) for r in done)
-    print(f"[serve] {cfg.name}: {len(done)}/{args.requests} requests, "
+    metrics = MetricsRegistry() if args.metrics_out else None
+    spans_tr = SpanTracer() if args.spans_out else None
+    eng = Engine(cfg, params, args.slots, max_len,
+                 metrics=metrics, spans=spans_tr)
+
+    t0 = time.perf_counter()
+    replay(eng, arrivals)
+    # Engine.step syncs on the step outputs before returning (explicit
+    # block_until_ready), so this delta is a true post-device wall clock.
+    dt = time.perf_counter() - t0
+    finished = [r for r in eng.done if r.reason == SP.FINISHED]
+    truncated = [r for r in eng.done if r.reason != SP.FINISHED]
+    total_tokens = sum(len(r.out) for r in eng.done)
+    print(f"[serve] {cfg.name}: {len(finished)}/{args.requests} requests, "
           f"{total_tokens} tokens in {dt:.2f}s "
           f"({total_tokens / max(dt, 1e-9):.1f} tok/s, "
           f"{eng.steps} engine steps)")
-    assert len(done) == args.requests, "not all requests completed"
+    if truncated:
+        print(f"[serve] {len(truncated)} truncated: "
+              f"{sorted(set(r.reason for r in truncated))}")
+    if metrics is not None:
+        ttft = metrics.get("serve_ttft_us")
+        print(f"[serve] ttft p50={ttft.quantile(0.5):.0f}us "
+              f"p99={ttft.quantile(0.99):.0f}us "
+              f"({ttft.count} first tokens)")
+        with open(args.metrics_out, "w") as f:
+            f.write(metrics.dump_json()
+                    if args.metrics_out.endswith(".json")
+                    else metrics.to_prometheus())
+        print(f"[serve] metrics -> {args.metrics_out}")
+    if spans_tr is not None:
+        problems = SP.validate(spans_tr.events, slots=args.slots,
+                               engine_steps=eng.steps)
+        assert not problems, problems
+        with open(args.spans_out, "w") as f:
+            f.write(SP.to_jsonl(spans_tr.events, stable=args.stable))
+        print(f"[serve] {len(spans_tr.events)} span events -> "
+              f"{args.spans_out}{' (stable)' if args.stable else ''}")
+    assert len(eng.done) == args.requests, "requests lost by the engine"
+    assert len(finished) == args.requests, "not all requests completed"
     print("OK")
 
 

@@ -36,12 +36,41 @@ class TestExamples:
                     "--inject-failure", "6", "--batch", "4", "--seq", "32"])
         assert "restarts=1" in out and out.strip().endswith("OK")
 
-    def test_serve_batched(self):
+    def test_serve_batched(self, tmp_path):
+        prom = tmp_path / "batched.prom"
+        spans = tmp_path / "batched.jsonl"
         out = _run(["examples/serve_batched.py", "--requests", "2",
-                    "--gen", "6", "--prompt-len", "8"])
+                    "--gen", "6", "--prompt-len", "8",
+                    "--metrics-out", str(prom),
+                    "--spans-out", str(spans), "--stable"])
         assert out.strip().endswith("OK")
+        assert "serve_tokens_generated_total 12" in prom.read_text()
+        self._check_spans(spans, requests=2)
 
-    def test_serve_launcher(self):
+    def test_serve_launcher(self, tmp_path):
+        metrics = tmp_path / "serve.json"
+        spans = tmp_path / "serve.jsonl"
         out = _run(["-m", "repro.launch.serve", "--slots", "2",
-                    "--requests", "3", "--gen", "4", "--prompt-len", "4"])
+                    "--requests", "3", "--gen", "4", "--prompt-len", "4",
+                    "--metrics-out", str(metrics),
+                    "--spans-out", str(spans), "--stable"])
         assert "3/3 requests" in out
+        import json
+        doc = json.loads(metrics.read_text())
+        m = doc["metrics"]
+        assert m["serve_requests_completed_total"]["value"] == 3
+        assert m["serve_ttft_us"]["count"] == 3
+        self._check_spans(spans, requests=3)
+
+    @staticmethod
+    def _check_spans(path, requests):
+        sys.path.insert(0, str(ROOT / "src"))
+        try:
+            from repro.obs import spans as SP
+        finally:
+            sys.path.pop(0)
+        events = SP.from_jsonl(path.read_text())
+        assert SP.validate(events) == []
+        summaries = SP.summarize(events)
+        assert len(summaries) == requests
+        assert all(s.reason == SP.FINISHED for s in summaries.values())

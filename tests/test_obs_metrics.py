@@ -1,0 +1,169 @@
+"""Tests for the serving metrics registry (``repro.obs.metrics``).
+
+The histogram quantile contract is checked against numpy:
+
+* value-aligned buckets + integer ``q * count`` -> exact match with
+  ``numpy.quantile(..., method="inverted_cdf")``;
+* arbitrary data on coarse buckets -> within one bucket width of the
+  linear-interpolation numpy quantile.
+"""
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                               DEFAULT_TIME_BUCKETS_US)
+
+
+# -- counters / gauges -------------------------------------------------------
+
+
+def test_counter_semantics():
+    c = Counter("reqs")
+    assert c.value == 0
+    c.inc()
+    c.inc(4)
+    assert c.value == 5
+    with pytest.raises(ValueError):
+        c.inc(-1)
+    assert c.value == 5
+
+
+def test_gauge_semantics():
+    g = Gauge("depth")
+    g.set(7)
+    g.inc(2)
+    g.dec(3)
+    assert g.value == 6
+    g.set(-1)           # gauges may go negative
+    assert g.value == -1
+
+
+def test_registry_get_or_create_and_kind_conflict():
+    reg = MetricsRegistry()
+    c1 = reg.counter("serve_requests_total")
+    c2 = reg.counter("serve_requests_total")
+    assert c1 is c2
+    with pytest.raises(TypeError):
+        reg.gauge("serve_requests_total")
+    with pytest.raises(TypeError):
+        reg.histogram("serve_requests_total")
+    with pytest.raises(KeyError):
+        reg.get("never_registered")
+    assert reg.names() == ["serve_requests_total"]
+
+
+# -- histogram quantiles -----------------------------------------------------
+
+
+def test_quantile_exact_on_value_aligned_buckets():
+    # observations 1..100, buckets at every integer bound: every distinct
+    # value sits exactly on a bucket upper bound, and q*count is an
+    # integer for q in {.5, .9, .99} -> the interpolated estimate must
+    # equal numpy's inverted_cdf quantile exactly
+    data = np.arange(1, 101, dtype=np.float64)
+    h = Histogram("t", buckets=list(range(1, 101)))
+    for v in data:
+        h.observe(v)
+    for q in (0.5, 0.9, 0.99):
+        exact = float(np.quantile(data, q, method="inverted_cdf"))
+        assert h.quantile(q) == pytest.approx(exact, abs=1e-9), q
+
+
+def test_quantile_within_bucket_width_on_coarse_buckets():
+    rng = np.random.default_rng(0)
+    data = rng.uniform(50, 9_000, size=500)
+    bounds = [100, 200, 500, 1_000, 2_000, 5_000, 10_000]
+    h = Histogram("t", buckets=bounds)
+    for v in data:
+        h.observe(v)
+    edges = [float(min(data))] + [float(b) for b in bounds]
+    for q in (0.1, 0.5, 0.9, 0.99):
+        est = h.quantile(q)
+        exact = float(np.quantile(data, q))
+        # width of the bucket the estimate landed in
+        i = int(np.searchsorted(bounds, est))
+        lo = edges[i]
+        hi = bounds[i] if i < len(bounds) else float(max(data))
+        assert abs(est - exact) < (hi - lo), (q, est, exact)
+
+
+def test_quantile_edges():
+    h = Histogram("t")
+    assert math.isnan(h.quantile(0.5))          # empty
+    h.observe(150)
+    assert h.quantile(0.0) == 150               # single value: clamped
+    assert h.quantile(0.5) == 150
+    assert h.quantile(1.0) == 150
+    with pytest.raises(ValueError):
+        h.quantile(1.5)
+
+
+def test_histogram_observe_le_semantics_and_overflow():
+    h = Histogram("t", buckets=[10, 20])
+    for v in (10, 20, 21, 5):
+        h.observe(v)
+    # le semantics: 10 falls in the first bucket, 20 in the second,
+    # 21 overflows
+    assert h.bucket_counts == [2, 1, 1]
+    assert h.count == 4
+    assert h.sum == 56
+    assert (h.min, h.max) == (5, 21)
+
+
+def test_histogram_rejects_bad_buckets():
+    with pytest.raises(ValueError):
+        Histogram("t", buckets=[])
+    with pytest.raises(ValueError):
+        Histogram("t", buckets=[10, 10])
+    with pytest.raises(ValueError):
+        Histogram("t", buckets=[20, 10])
+
+
+def test_default_buckets_are_strictly_increasing():
+    assert list(DEFAULT_TIME_BUCKETS_US) == \
+        sorted(set(DEFAULT_TIME_BUCKETS_US))
+
+
+# -- exporters ---------------------------------------------------------------
+
+
+def test_prometheus_golden():
+    reg = MetricsRegistry()
+    reg.counter("serve_requests_total", "requests accepted").inc(3)
+    reg.gauge("serve_queue_depth").set(2)
+    h = reg.histogram("serve_step_latency_us", buckets=[100, 1000])
+    h.observe(50)
+    h.observe(150)
+    h.observe(5000)
+    assert reg.to_prometheus() == (
+        "# TYPE serve_queue_depth gauge\n"
+        "serve_queue_depth 2\n"
+        "# HELP serve_requests_total requests accepted\n"
+        "# TYPE serve_requests_total counter\n"
+        "serve_requests_total 3\n"
+        "# TYPE serve_step_latency_us histogram\n"
+        'serve_step_latency_us_bucket{le="100"} 1\n'
+        'serve_step_latency_us_bucket{le="1000"} 2\n'
+        'serve_step_latency_us_bucket{le="+Inf"} 3\n'
+        "serve_step_latency_us_sum 5200\n"
+        "serve_step_latency_us_count 3\n")
+
+
+def test_json_export_round_trips_and_is_deterministic():
+    reg = MetricsRegistry()
+    reg.counter("b").inc(2)
+    reg.gauge("a").set(1.5)
+    h = reg.histogram("c", buckets=[10])
+    h.observe(4)
+    doc = json.loads(reg.dump_json())
+    assert doc["schema"] == 1
+    assert doc["metrics"]["b"] == {"kind": "counter", "value": 2}
+    assert doc["metrics"]["a"] == {"kind": "gauge", "value": 1.5}
+    assert doc["metrics"]["c"]["count"] == 1
+    assert doc["metrics"]["c"]["p50"] == 4
+    assert reg.dump_json() == reg.dump_json()
+    # empty registry exports cleanly
+    assert MetricsRegistry().to_prometheus() == ""
