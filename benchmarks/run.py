@@ -6,7 +6,8 @@ Prints ``name,us_per_call,derived`` CSV per line.  Sections:
   calyx_bench       simulator/estimator differential -> BENCH_calyx.json
   serve_bench       serving load harness -> BENCH_serve.json
   kernel_bench      Pallas kernel microbenches (interpret mode)
-  roofline_report   per-cell roofline terms from the dry-run artifacts
+  model_profile_bench  per-operator decode profiles -> BENCH_model.json
+  roofline_report   offload ranking from BENCH_model.json (+ dry-run cells)
 """
 from __future__ import annotations
 
@@ -22,7 +23,8 @@ def _emit(name: str, us_per_call: float, derived) -> None:
 def main() -> None:
     sections = sys.argv[1:] or ["paper_tables", "banking_ablation",
                                 "calyx_bench", "serve_bench",
-                                "kernel_bench", "roofline_report"]
+                                "kernel_bench", "model_profile_bench",
+                                "roofline_report"]
     t0 = time.time()
     failures = []
     for section in sections:
@@ -43,6 +45,9 @@ def main() -> None:
             elif section == "kernel_bench":
                 from benchmarks import kernel_bench
                 kernel_bench.run(_emit)
+            elif section == "model_profile_bench":
+                from benchmarks import model_profile_bench
+                model_profile_bench.run(_emit)
             elif section == "roofline_report":
                 from benchmarks import roofline_report
                 roofline_report.run(_emit)

@@ -27,7 +27,8 @@ import numpy as np
 from repro.launch.serve import serve_metrics
 from repro.models import decode, get_config
 from repro.models import params as MP
-from repro.obs import MetricsRegistry, SpanTracer, spans as SP
+from repro.obs import MetricsRegistry, SpanTracer, modelprof as MPF, \
+    spans as SP
 
 
 def main():
@@ -42,8 +43,13 @@ def main():
                          "(.json -> JSON, anything else -> Prometheus text)")
     ap.add_argument("--spans-out", default="",
                     help="write the span event stream here as JSONL")
+    ap.add_argument("--profile-layers", default="",
+                    help="run the sliced per-operator decode step and "
+                         "write one layer record per (op, step) here as "
+                         "JSONL (repro.obs.modelprof schema)")
     ap.add_argument("--stable", action="store_true",
-                    help="normalize wall-clock fields in the span export")
+                    help="normalize wall-clock fields in the span and "
+                         "layer exports")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
@@ -59,18 +65,41 @@ def main():
         modality = jnp.asarray(rng.normal(
             size=(args.requests, cfg.encoder_seq, cfg.d_model)), cfg.dtype)
 
-    cache = decode.init_cache(cfg, params, args.requests, max_len,
-                              modality=modality)
-    step = decode.make_serve_step(cfg)
+    layers = None
+    if args.profile_layers:
+        if cfg.family not in decode.PROFILED_FAMILIES:
+            ap.error(f"--profile-layers supports families "
+                     f"{decode.PROFILED_FAMILIES}, not {cfg.family}")
+        layers = MPF.LayerProfiler()
+
+    if layers is not None:
+        pstep = decode.make_profiled_serve_step(cfg)
+        cache = decode.ProfiledServeStep.init_cache(cfg, params,
+                                                    args.requests, max_len)
+    else:
+        cache = decode.init_cache(cfg, params, args.requests, max_len,
+                                  modality=modality)
+        step = decode.make_serve_step(cfg)
 
     metrics = MetricsRegistry() if args.metrics_out else None
     spans_tr = SpanTracer() if args.spans_out else None
     observing = metrics is not None or spans_tr is not None
-    m = serve_metrics(metrics, cfg, args.requests, cache) \
+    m = serve_metrics(metrics, cfg, args.requests,
+                      decode.ProfiledServeStep.stack_cache(cache)
+                      if layers is not None else cache) \
         if metrics is not None else None
     now_us = spans_tr.now_us if spans_tr is not None \
         else lambda t0=time.perf_counter(): int((time.perf_counter() - t0)
                                                 * 1e6)
+
+    if layers is not None:
+        def step(params, cache, toks, pos):
+            """Sliced step: record one layer wall per operator, stamped on
+            the span tracer's clock when one is attached (one-clock rule)."""
+            logits, cache, walls = pstep(params, cache, toks, pos)
+            layers.on_step(int(pos), pstep.ops, walls,
+                           ts_us=now_us() if spans_tr is not None else None)
+            return logits, cache
 
     prompts = rng.integers(1, cfg.vocab_size,
                            size=(args.requests, args.prompt_len)).astype(
@@ -192,6 +221,17 @@ def main():
             f.write(SP.to_jsonl(spans_tr.events, stable=args.stable))
         print(f"{len(spans_tr.events)} span events -> {args.spans_out}"
               f"{' (stable)' if args.stable else ''}")
+    if layers is not None:
+        problems = MPF.validate(layers.records, cfg=cfg,
+                                engine_steps=args.prompt_len + args.gen)
+        if spans_tr is not None:
+            problems += MPF.join_mismatches(layers.records, spans_tr.events,
+                                            cfg=cfg)
+        assert not problems, problems
+        with open(args.profile_layers, "w") as f:
+            f.write(MPF.to_jsonl(layers.records, stable=args.stable))
+        print(f"{len(layers.records)} layer records -> "
+              f"{args.profile_layers}{' (stable)' if args.stable else ''}")
     assert np.isfinite(np.asarray(logits, np.float32)).all()
     print("OK")
 

@@ -34,6 +34,8 @@ import numpy as np
 from repro.models import decode, get_config
 from repro.models import params as MP
 from repro.obs import MetricsRegistry, SpanTracer, spans as SP, traffic
+from repro.obs.modelprof import LayerProfiler
+from repro.obs import modelprof as MPF
 
 
 class Request:
@@ -94,13 +96,25 @@ class Engine:
 
     def __init__(self, cfg, params, slots: int, max_len: int,
                  metrics: Optional[MetricsRegistry] = None,
-                 spans: Optional[SpanTracer] = None):
+                 spans: Optional[SpanTracer] = None,
+                 layers: Optional["LayerProfiler"] = None):
         self.cfg = cfg
         self.params = params
         self.slots: List[Optional[Request]] = [None] * slots
         self.pos = 0
-        self.cache = decode.init_cache(cfg, params, slots, max_len)
         self.max_len = max_len
+        # attaching a layer profiler switches the engine to the sliced
+        # per-operator step (same math, bit-identical logits — asserted by
+        # tests) whose cache travels in per-group list form; the fused
+        # engine pays nothing for the feature existing
+        self.layers = layers
+        if layers is not None:
+            self._prof = decode.make_profiled_serve_step(cfg)
+            self.cache = decode.ProfiledServeStep.init_cache(
+                cfg, params, slots, max_len)
+        else:
+            self._prof = None
+            self.cache = decode.init_cache(cfg, params, slots, max_len)
         self._step = decode.make_serve_step(cfg)
         self.steps = 0
         self.queue: List[Request] = []
@@ -215,9 +229,15 @@ class Engine:
                 self.spans.emit(SP.REQ_PREFILL, prov=SP.req_prov(rid),
                                 step=self.steps, rid=rid)
         occupied = self.inflight
-        logits, self.cache = self._step(self.params, self.cache,
-                                        jnp.asarray(toks),
-                                        jnp.asarray(self.pos, jnp.int32))
+        seg_walls: Optional[List[float]] = None
+        if self._prof is not None:
+            logits, self.cache, seg_walls = self._prof(
+                self.params, self.cache, jnp.asarray(toks),
+                jnp.asarray(self.pos, jnp.int32))
+        else:
+            logits, self.cache = self._step(self.params, self.cache,
+                                            jnp.asarray(toks),
+                                            jnp.asarray(self.pos, jnp.int32))
         nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)
         # the argmax transfer above already forced the logits; block on the
         # cache too so every wall-clock stamp below is post-device-sync
@@ -262,6 +282,13 @@ class Engine:
             m["pre"].inc(prefill_fed)
             m["occ"].set(self.inflight)
             m["step_h"].observe(wall_us)
+        if self.layers is not None and seg_walls is not None:
+            # one-clock rule: when a span tracer is attached its epoch is
+            # authoritative, so the layer records stamp with the same
+            # post-step `now` as the step span they join to
+            self.layers.on_step(
+                self.steps, self._prof.ops, seg_walls,
+                ts_us=now if self.spans is not None else None)
         self.pos += 1
         self.steps += 1
 
@@ -352,9 +379,13 @@ def main():
                          "(.json -> JSON, anything else -> Prometheus text)")
     ap.add_argument("--spans-out", default="",
                     help="write the span event stream here as JSONL")
+    ap.add_argument("--profile-layers", default="",
+                    help="run the sliced per-operator step and write one "
+                         "layer record per operator per engine step here "
+                         "as JSONL (repro.obs.modelprof)")
     ap.add_argument("--stable", action="store_true",
-                    help="normalize wall-clock fields in the span export "
-                         "(byte-identical across same-seed runs)")
+                    help="normalize wall-clock fields in the span/layer "
+                         "exports (byte-identical across same-seed runs)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
@@ -378,8 +409,9 @@ def main():
 
     metrics = MetricsRegistry() if args.metrics_out else None
     spans_tr = SpanTracer() if args.spans_out else None
+    layers = LayerProfiler() if args.profile_layers else None
     eng = Engine(cfg, params, args.slots, max_len,
-                 metrics=metrics, spans=spans_tr)
+                 metrics=metrics, spans=spans_tr, layers=layers)
 
     t0 = time.perf_counter()
     replay(eng, arrivals)
@@ -414,6 +446,17 @@ def main():
             f.write(SP.to_jsonl(spans_tr.events, stable=args.stable))
         print(f"[serve] {len(spans_tr.events)} span events -> "
               f"{args.spans_out}{' (stable)' if args.stable else ''}")
+    if layers is not None:
+        problems = MPF.validate(layers.records, cfg=cfg,
+                                engine_steps=eng.steps)
+        if spans_tr is not None:
+            problems += MPF.join_mismatches(layers.records,
+                                            spans_tr.events, cfg=cfg)
+        assert not problems, problems
+        with open(args.profile_layers, "w") as f:
+            f.write(MPF.to_jsonl(layers.records, stable=args.stable))
+        print(f"[serve] {len(layers.records)} layer records -> "
+              f"{args.profile_layers}{' (stable)' if args.stable else ''}")
     assert len(eng.done) == args.requests, "requests lost by the engine"
     assert len(finished) == args.requests, "not all requests completed"
     print("OK")

@@ -114,11 +114,17 @@ def rwkv_cache_shape(cfg: ModelConfig, batch: int):
     }
 
 
-def rwkv_decode_step(cfg: ModelConfig, p, x1: jax.Array, cache: Dict
-                     ) -> Tuple[jax.Array, Dict]:
+def rwkv_time_mix_step(cfg: ModelConfig, p, x1: jax.Array, cache: Dict
+                       ) -> Tuple[jax.Array, Dict]:
+    """Time-mix half of the decode step (ln1 + WKV recurrence + gate).
+
+    Consumes ``cache['wkv']``/``cache['shift_tm']``; returns the residual
+    stream after the time-mix and the updated halves of the cache.  Split
+    out of :func:`rwkv_decode_step` so the layer profiler can time the
+    sequence-mixing and channel-mixing operators separately.
+    """
     b, _, d = x1.shape
     h, dh = cfg.num_heads, cfg.head_dim
-    # time mix
     xn = layer_norm(x1, p["ln1"]["w"], p["ln1"]["b"])
     xx = cache["shift_tm"]
     xr, xk, xv, xw, xg = _ddlerp(p["tm"], xn, xx)
@@ -130,7 +136,12 @@ def rwkv_decode_step(cfg: ModelConfig, p, x1: jax.Array, cache: Dict
     o = _group_norm(o, p["tm"]["gn_w"], p["tm"]["gn_b"], heads=h)
     o = o * jax.nn.silu(g)
     x1 = x1 + jnp.einsum("bse,ed->bsd", o.astype(x1.dtype), p["tm"]["wo"])
-    # channel mix
+    return x1, {"wkv": wkv_new, "shift_tm": xn}
+
+
+def rwkv_channel_mix_step(cfg: ModelConfig, p, x1: jax.Array, cache: Dict
+                          ) -> Tuple[jax.Array, Dict]:
+    """Channel-mix half of the decode step (ln2 + gated squared-ReLU FFN)."""
     xn2 = layer_norm(x1, p["ln2"]["w"], p["ln2"]["b"])
     xxc = cache["shift_cm"]
     xk2 = xn2 + (xxc - xn2) * p["cm"]["mu_k"]
@@ -139,5 +150,11 @@ def rwkv_decode_step(cfg: ModelConfig, p, x1: jax.Array, cache: Dict
         jnp.einsum("bsd,df->bsf", xk2, p["cm"]["wk"]), 0.0))
     kv = jnp.einsum("bsf,fd->bsd", kk, p["cm"]["wv"])
     rr = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr2, p["cm"]["wr"]))
-    x1 = x1 + rr * kv
-    return x1, {"wkv": wkv_new, "shift_tm": xn, "shift_cm": xn2}
+    return x1 + rr * kv, {"shift_cm": xn2}
+
+
+def rwkv_decode_step(cfg: ModelConfig, p, x1: jax.Array, cache: Dict
+                     ) -> Tuple[jax.Array, Dict]:
+    x1, c_tm = rwkv_time_mix_step(cfg, p, x1, cache)
+    x1, c_cm = rwkv_channel_mix_step(cfg, p, x1, cache)
+    return x1, {**c_tm, **c_cm}

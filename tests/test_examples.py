@@ -31,21 +31,29 @@ class TestExamples:
                     "--factor", "2"])
         assert "cycles=" in out and ".futil" in out
 
-    def test_train_lm_with_failure(self):
+    def test_train_lm_with_failure(self, tmp_path):
+        layers = tmp_path / "train_layers.jsonl"
         out = _run(["examples/train_lm.py", "--steps", "14",
-                    "--inject-failure", "6", "--batch", "4", "--seq", "32"])
+                    "--inject-failure", "6", "--batch", "4", "--seq", "32",
+                    "--profile-layers", str(layers), "--profile-steps", "4",
+                    "--stable"])
         assert "restarts=1" in out and out.strip().endswith("OK")
+        self._check_layers(layers, arch="qwen2-0.5b", steps=4)
 
     def test_serve_batched(self, tmp_path):
         prom = tmp_path / "batched.prom"
         spans = tmp_path / "batched.jsonl"
+        layers = tmp_path / "batched_layers.jsonl"
         out = _run(["examples/serve_batched.py", "--requests", "2",
                     "--gen", "6", "--prompt-len", "8",
                     "--metrics-out", str(prom),
-                    "--spans-out", str(spans), "--stable"])
+                    "--spans-out", str(spans),
+                    "--profile-layers", str(layers), "--stable"])
         assert out.strip().endswith("OK")
         assert "serve_tokens_generated_total 12" in prom.read_text()
         self._check_spans(spans, requests=2)
+        # the layer stream joins against the span stream: prompt+gen steps
+        self._check_layers(layers, arch="qwen2-0.5b", steps=14)
 
     def test_serve_launcher(self, tmp_path):
         metrics = tmp_path / "serve.json"
@@ -74,3 +82,17 @@ class TestExamples:
         summaries = SP.summarize(events)
         assert len(summaries) == requests
         assert all(s.reason == SP.FINISHED for s in summaries.values())
+
+    @staticmethod
+    def _check_layers(path, arch, steps):
+        """The layer artifact parses and passes the modelprof invariants:
+        every step carries the complete op set in execution order."""
+        sys.path.insert(0, str(ROOT / "src"))
+        try:
+            from repro.models import get_config
+            from repro.obs import modelprof as MPF
+        finally:
+            sys.path.pop(0)
+        cfg = get_config(arch).reduced()
+        records = MPF.from_jsonl(path.read_text())
+        assert MPF.validate(records, cfg=cfg, engine_steps=steps) == []

@@ -1,0 +1,222 @@
+"""Per-operator profiling: sliced-step equivalence, record invariants,
+the analytic-vs-HLO cross-check, and the three-level join."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.serve import Engine, ReplayDriver, Request
+from repro.models import decode, get_config
+from repro.models import params as MP
+from repro.models.decode import PROFILED_FAMILIES, profile_ops
+from repro.obs import SpanTracer
+from repro.obs import modelprof as MPF
+
+# one arch per decomposition: dense, local/global dense, dense+bias,
+# ssm, moe, hybrid
+EQUIV_ARCHS = ("qwen2-0.5b", "gemma2-27b", "starcoder2-7b",
+               "rwkv6-7b", "olmoe-1b-7b", "zamba2-7b")
+
+
+def _setup(arch, batch=2, cache_len=16, seed=0):
+    cfg = get_config(arch).reduced()
+    params = MP.init_params(cfg, seed=seed)
+    return cfg, params
+
+
+class TestProfileOps:
+    def test_embed_first_head_last(self):
+        for arch in EQUIV_ARCHS:
+            ops = profile_ops(get_config(arch).reduced())
+            assert ops[0] == ("embed", -1)
+            assert ops[-1] == ("head", -1)
+
+    def test_per_group_ops_cover_all_groups(self):
+        cfg = get_config("qwen2-0.5b").reduced()
+        groups = {g for _, g in profile_ops(cfg) if g >= 0}
+        assert groups == set(range(cfg.num_groups))
+
+    def test_unprofiled_family_raises(self):
+        with pytest.raises(NotImplementedError):
+            profile_ops(get_config("llama-3.2-vision-11b").reduced())
+
+
+class TestSlicedEquivalence:
+    """The sliced step must be bit-identical to the fused step — slicing
+    is observability, not a numerics change."""
+
+    @pytest.mark.parametrize("arch", EQUIV_ARCHS)
+    def test_logits_and_cache_match_fused(self, arch):
+        cfg, params = _setup(arch)
+        batch, cache_len, steps = 2, 16, 3
+        fused = decode.make_serve_step(cfg)
+        prof = decode.make_profiled_serve_step(cfg)
+        cache_f = decode.init_cache(cfg, params, batch, cache_len)
+        cache_p = decode.ProfiledServeStep.init_cache(cfg, params, batch,
+                                                      cache_len)
+        rng = np.random.default_rng(0)
+        tok = jnp.asarray(rng.integers(1, cfg.vocab_size,
+                                       size=(batch, 1)), jnp.int32)
+        for i in range(steps):
+            pos = jnp.asarray(i, jnp.int32)
+            lf, cache_f = fused(params, cache_f, tok, pos)
+            lp, cache_p, walls = prof(params, cache_p, tok, pos)
+            assert len(walls) == len(prof.ops)
+            assert all(w >= 0 for w in walls)
+            np.testing.assert_array_equal(np.asarray(lf), np.asarray(lp))
+            tok = jnp.argmax(lf[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        stacked = decode.ProfiledServeStep.stack_cache(cache_p)
+        for a, b in zip(jax.tree.leaves(cache_f), jax.tree.leaves(stacked)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+class TestRecords:
+    def _records(self, n_steps=2):
+        cfg = get_config("qwen2-0.5b").reduced()
+        prof = MPF.LayerProfiler()
+        ops = profile_ops(cfg)
+        for s in range(n_steps):
+            prof.on_step(s, ops, [10.0] * len(ops))
+        return cfg, prof.records
+
+    def test_roundtrip(self):
+        _, records = self._records()
+        text = MPF.to_jsonl(records)
+        back = MPF.from_jsonl(text)
+        assert back == records
+
+    def test_stable_export_is_deterministic(self):
+        cfg, _ = self._records()
+        ops = profile_ops(cfg)
+        streams = []
+        for _ in range(2):
+            prof = MPF.LayerProfiler()
+            for s in range(3):
+                # jittered walls/stamps must normalize away
+                prof.on_step(s, ops, [float(hash((s, i)) % 97)
+                                      for i in range(len(ops))])
+            streams.append(MPF.to_jsonl(prof.records, stable=True))
+        assert streams[0] == streams[1]
+        assert '"n":0' in streams[0]
+
+    def test_record_off_profiler_records_nothing(self):
+        cfg = get_config("qwen2-0.5b").reduced()
+        prof = MPF.LayerProfiler(record=False)
+        ops = profile_ops(cfg)
+        prof.on_step(0, ops, [1.0] * len(ops))
+        assert prof.records == []
+
+    def test_wrong_kind_rejected(self):
+        with pytest.raises(ValueError):
+            MPF.LayerRecord.from_json('{"t":0,"k":"step","p":[],"s":0,'
+                                      '"o":"attn","g":0,"n":1}')
+
+    def test_validate_passes_complete_stream(self):
+        cfg, records = self._records()
+        assert MPF.validate(records, cfg=cfg, engine_steps=2) == []
+
+    def test_validate_rejects_malformed(self):
+        cfg, records = self._records()
+        # bad provenance
+        bad = [MPF.LayerRecord(0, "attn", 0, 0, 5, ("engine", "s0", "mlp"))]
+        assert any("prov" in p for p in MPF.validate(bad))
+        # negative duration
+        bad = [MPF.LayerRecord(0, "attn", 0, 0, -5,
+                               MPF.layer_prov(0, "attn", 0))]
+        assert any("negative" in p for p in MPF.validate(bad))
+        # incomplete op set for a step
+        assert any("ops" in p
+                   for p in MPF.validate(records[:-1], cfg=cfg))
+        # wrong step count
+        assert any("engine ran" in p
+                   for p in MPF.validate(records, engine_steps=5))
+        # non-contiguous steps
+        shifted = [MPF.LayerRecord(r.ts_us, r.op, r.group, r.step + 1,
+                                   r.dur_us,
+                                   MPF.layer_prov(r.step + 1, r.op, r.group))
+                   for r in records]
+        assert any("contiguous" in p for p in MPF.validate(shifted))
+
+
+class TestAnalyticModel:
+    def test_costs_align_with_profile_ops(self):
+        for arch in ("qwen2-0.5b", "rwkv6-7b", "olmoe-1b-7b", "zamba2-7b"):
+            cfg = get_config(arch).reduced()
+            costs = MPF.analytic_op_costs(cfg, batch=2, cache_len=16)
+            assert [(c.op, c.group) for c in costs] == list(profile_ops(cfg))
+            for c in costs:
+                assert c.bytes_rw > 0
+                if c.op != "embed":
+                    assert c.flops > 0, c
+
+    def test_crosscheck_hlo_qwen(self):
+        """The analytic dot-FLOPs must agree with hlo_analysis on the real
+        decode-step HLO within the documented tolerances (the committed
+        BENCH_model.json gate, run here on the smallest config)."""
+        cfg = get_config("qwen2-0.5b").reduced()
+        report, problems = MPF.crosscheck_hlo(cfg, batch=2, cache_len=32)
+        assert problems == [], (report, problems)
+        assert report["flops_rel_err"] <= MPF.FLOPS_RTOL
+        assert (1.0 / MPF.BYTES_FACTOR <= report["bytes_ratio"]
+                <= MPF.BYTES_FACTOR)
+
+    def test_roofline_class_ridge(self):
+        peaks = (100.0, 10.0)          # ridge at 10 FLOPs/byte
+        assert MPF.roofline_class(5.0, peaks) == "memory"
+        assert MPF.roofline_class(20.0, peaks) == "compute"
+
+    def test_offload_report_ranked_by_share(self):
+        cfg = get_config("qwen2-0.5b").reduced()
+        prof = MPF.LayerProfiler()
+        ops = profile_ops(cfg)
+        walls = [100.0 if op == "attn" else 10.0 for op, _ in ops]
+        prof.on_step(0, ops, walls)
+        costs = MPF.analytic_op_costs(cfg, batch=1, cache_len=4096)
+        rows = MPF.offload_report(cfg, prof.records, costs)
+        assert rows[0]["op"] == "attn" and rows[0]["rank"] == 1
+        assert [r["rank"] for r in rows] == list(range(1, len(rows) + 1))
+        shares = [r["share"] for r in rows]
+        assert shares == sorted(shares, reverse=True)
+        assert all(r["bound"] in ("compute", "memory") for r in rows)
+
+
+class TestThreeLevelJoin:
+    def _drive(self, arch="qwen2-0.5b", requests=3):
+        cfg, params = _setup(arch)
+        tr = SpanTracer()
+        prof = MPF.LayerProfiler()
+        eng = Engine(cfg, params, slots=2, max_len=64,
+                     spans=tr, layers=prof)
+        rng = np.random.default_rng(1)
+        arrivals = [(0, Request(r, rng.integers(
+            1, cfg.vocab_size, size=4).astype(np.int32), 4))
+            for r in range(requests)]
+        drv = ReplayDriver(eng, arrivals)
+        while drv.active:
+            drv.tick()
+        return cfg, eng, tr, prof
+
+    def test_join_closes(self):
+        cfg, eng, tr, prof = self._drive()
+        assert MPF.validate(prof.records, cfg=cfg,
+                            engine_steps=eng.steps) == []
+        assert MPF.join_mismatches(prof.records, tr.events, cfg=cfg) == []
+        rows = MPF.join_steps(prof.records, tr.events)
+        assert set(rows) == set(range(eng.steps))
+        for row in rows.values():
+            assert row.layer_count == len(profile_ops(cfg))
+            assert 0 < row.layers_wall_us <= row.step_wall_us
+
+    def test_join_detects_lost_segments(self):
+        cfg, eng, tr, prof = self._drive()
+        # drop one step's records: the span now has no layer records
+        broken = [r for r in prof.records if r.step != 1]
+        problems = MPF.join_mismatches(broken, tr.events, cfg=cfg)
+        assert problems
+
+    def test_summaries_cover_all_ops(self):
+        cfg, eng, tr, prof = self._drive()
+        summary = MPF.summarize(prof.records)
+        assert set(summary) == set(profile_ops(cfg))
+        shares = MPF.op_shares(prof.records)
+        assert abs(sum(shares.values()) - 1.0) < 1e-9
