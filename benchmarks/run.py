@@ -5,6 +5,7 @@ Prints ``name,us_per_call,derived`` CSV per line.  Sections:
   banking_ablation  layout-vs-branchy, restructuring, port model, MoE HLO
   calyx_bench       simulator/estimator differential -> BENCH_calyx.json
   serve_bench       serving load harness -> BENCH_serve.json
+  resilience_bench  chaos/goodput harness -> BENCH_resilience.json
   kernel_bench      Pallas kernel microbenches (interpret mode)
   model_profile_bench  per-operator decode profiles -> BENCH_model.json
   roofline_report   offload ranking from BENCH_model.json (+ dry-run cells)
@@ -23,8 +24,8 @@ def _emit(name: str, us_per_call: float, derived) -> None:
 def main() -> None:
     sections = sys.argv[1:] or ["paper_tables", "banking_ablation",
                                 "calyx_bench", "serve_bench",
-                                "kernel_bench", "model_profile_bench",
-                                "roofline_report"]
+                                "resilience_bench", "kernel_bench",
+                                "model_profile_bench", "roofline_report"]
     t0 = time.time()
     failures = []
     for section in sections:
@@ -42,6 +43,9 @@ def main() -> None:
             elif section == "serve_bench":
                 from benchmarks import serve_bench
                 serve_bench.run(_emit)
+            elif section == "resilience_bench":
+                from benchmarks import resilience_bench
+                resilience_bench.run(_emit)
             elif section == "kernel_bench":
                 from benchmarks import kernel_bench
                 kernel_bench.run(_emit)

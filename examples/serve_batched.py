@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.launch import faults as FLT, resilience as RES
 from repro.launch.serve import serve_metrics
 from repro.models import decode, get_config
 from repro.models import params as MP
@@ -50,7 +51,27 @@ def main():
     ap.add_argument("--stable", action="store_true",
                     help="normalize wall-clock fields in the span and "
                          "layer exports")
+    ap.add_argument("--fault-plan", default="",
+                    help="replay a FaultPlan JSON (repro.launch.faults): "
+                         "nan/inf logits, latency spikes, and cache "
+                         "corruption apply per step with an always-on "
+                         "finite guard; victim rows are dropped with the "
+                         "'fault' reason instead of poisoning the report. "
+                         "'exception' specs are engine-level and ignored "
+                         "by this fixed-batch driver")
+    ap.add_argument("--deadline-ms", type=float, default=0.0,
+                    help="wall-clock completion deadline for the batch; "
+                         "rows still in flight when it expires are "
+                         "truncated with the 'deadline' reason")
     args = ap.parse_args()
+
+    plan = None
+    if args.fault_plan:
+        if args.profile_layers:
+            ap.error("--fault-plan and --profile-layers are mutually "
+                     "exclusive (fault replay targets the standard path)")
+        plan = FLT.FaultPlan.load(args.fault_plan)
+    resilient = plan is not None or args.deadline_ms > 0
 
     cfg = get_config(args.arch).reduced()
     rng = np.random.default_rng(args.seed)
@@ -125,88 +146,195 @@ def main():
         m["adm"].inc(args.requests)
         m["occ"].set(args.requests)
 
-    def observe_step(idx, t_step, tokens_out, prefill_fed):
+    def observe_step(idx, t_step, tokens_out, prefill_fed, occ):
         """Per-step sync + event/metric emission (instrumented runs only)."""
         wall = int((time.perf_counter() - t_step) * 1e6)
         if spans_tr is not None:
             spans_tr.emit(SP.STEP, prov=SP.step_prov(idx), step=idx,
                           dur_us=wall,
-                          data=(args.requests, 0, tokens_out, prefill_fed))
+                          data=(occ, 0, tokens_out, prefill_fed))
         if m is not None:
             m["steps"].inc()
             m["gen"].inc(tokens_out)
             m["pre"].inc(prefill_fed)
             m["step_h"].observe(wall)
 
+    # fixed-batch resilience state: rows are dropped (never retried — there
+    # is no queue to retry into) and the rest of the batch keeps serving
+    alive = np.ones(args.requests, bool)
+    toks_emitted = np.zeros(args.requests, np.int64)
+    counts = {"inj": 0, "det": 0}
+    expired = False
+    sync_each = observing or resilient
+
+    def apply_faults(idx, logits, cache):
+        """Replay this step's fault specs.  Latency sleeps land inside the
+        step wall; 'exception' specs are engine-level and skipped here."""
+        for f in plan.at(idx):
+            if f.kind in (FLT.NAN_LOGITS, FLT.INF_LOGITS) \
+                    and 0 <= f.slot < args.requests:
+                poison = float("nan") if f.kind == FLT.NAN_LOGITS \
+                    else float("inf")
+                logits = logits.at[f.slot, -1].set(poison)
+            elif f.kind == FLT.CACHE_CORRUPT \
+                    and 0 <= f.slot < args.requests:
+                cache = decode.corrupt_cache_slot(cfg, cache, f.slot)
+            elif f.kind == FLT.LATENCY_SPIKE:
+                time.sleep(f.spike_us / 1e6)
+            else:
+                continue
+            counts["inj"] += 1
+            if m is not None:
+                m["finj"].inc()
+        return logits, cache
+
+    def finish_rows(rows, idx, detail):
+        """Terminate rows with a truncation reason (span + counters)."""
+        us = now_us() if observing else 0
+        for r in rows:
+            alive[r] = False
+            if spans_tr is not None:
+                spans_tr.emit(SP.REQ_COMPLETE, ts_us=us,
+                              prov=SP.req_prov(r), step=idx, rid=r, slot=r,
+                              detail=detail, data=(int(toks_emitted[r]),))
+        if m is not None and rows:
+            m["trunc"].inc(len(rows))
+            m["trunc_" + detail[len(SP.TRUNCATED_PREFIX):]].inc(len(rows))
+            m["occ"].set(int(alive.sum()))
+
+    def screen(idx, logits):
+        """Finite guard: drop rows whose sampled logits went non-finite."""
+        fin = np.isfinite(np.asarray(logits[:, -1], np.float32)).all(axis=1)
+        bad = [r for r in range(args.requests) if alive[r] and not fin[r]]
+        if bad:
+            counts["det"] += len(bad)
+            if m is not None:
+                m["fdet"].inc(len(bad))
+            finish_rows(bad, idx, SP.TRUNCATED_PREFIX + RES.REASON_FAULT)
+
+    def past_deadline():
+        return args.deadline_ms > 0 \
+            and (time.perf_counter() - t_serve0) * 1e3 > args.deadline_ms
+
     # prefill (token-by-token through the decode path)
-    t0 = time.perf_counter()
+    t0 = t_serve0 = time.perf_counter()
     logits = None
+    steps_run = 0
     for i in range(args.prompt_len):
         t_step = time.perf_counter() if observing else 0.0
         logits, cache = step(params, cache, jnp.asarray(prompts[:, i:i + 1]),
                              jnp.asarray(i, jnp.int32))
-        if observing:
+        if sync_each:
             jax.block_until_ready(logits)
+        if plan is not None:
+            logits, cache = apply_faults(i, logits, cache)
+        occ_now = int(alive.sum())  # rows dying this step still occupy it
+        if plan is not None:
+            screen(i, logits)
+        if i == args.prompt_len - 1:
             # the last prefill step's logits produce the first tokens
+            toks_emitted[alive] += 1
+        steps_run += 1
+        if observing:
             observe_step(i, t_step,
-                         args.requests if i == args.prompt_len - 1 else 0,
-                         args.requests)
+                         int(alive.sum()) if i == args.prompt_len - 1 else 0,
+                         args.requests, occ_now)
+        if past_deadline():
+            finish_rows([r for r in range(args.requests) if alive[r]], i,
+                        SP.TRUNCATED_PREFIX + RES.REASON_DEADLINE)
+            expired = True
+            break
     jax.block_until_ready(logits)
     t_prefill = time.perf_counter() - t0
 
     # greedy decode
     outs = []
-    tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
-    if observing:
-        jax.block_until_ready(tok)
-        first_us = now_us()
-        if spans_tr is not None:
-            for r in range(args.requests):
-                spans_tr.emit(SP.REQ_FIRST_TOKEN, ts_us=first_us,
-                              prov=SP.req_prov(r),
-                              step=args.prompt_len - 1, rid=r, slot=r)
-        if m is not None:
-            for _ in range(args.requests):
-                m["ttft"].observe(first_us - enqueue_us)
-    t0 = time.perf_counter()
-    for i in range(args.gen):
-        outs.append(np.asarray(tok))
-        t_step = time.perf_counter() if observing else 0.0
-        logits, cache = step(params, cache, tok,
-                             jnp.asarray(args.prompt_len + i, jnp.int32))
+    t_decode = 0.0
+    first_us = enqueue_us
+    if not expired:
         tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
         if observing:
             jax.block_until_ready(tok)
-            # the final iteration's freshly computed token is discarded
-            observe_step(args.prompt_len + i, t_step,
-                         args.requests if i < args.gen - 1 else 0,
-                         0)
-    jax.block_until_ready(tok)
-    t_decode = time.perf_counter() - t0
+            first_us = now_us()
+            if spans_tr is not None:
+                for r in range(args.requests):
+                    if alive[r]:
+                        spans_tr.emit(SP.REQ_FIRST_TOKEN, ts_us=first_us,
+                                      prov=SP.req_prov(r),
+                                      step=args.prompt_len - 1, rid=r,
+                                      slot=r)
+            if m is not None:
+                for r in range(args.requests):
+                    if alive[r]:
+                        m["ttft"].observe(first_us - enqueue_us)
+        t0 = time.perf_counter()
+        for i in range(args.gen):
+            outs.append(np.asarray(tok))
+            t_step = time.perf_counter() if observing else 0.0
+            logits, cache = step(params, cache, tok,
+                                 jnp.asarray(args.prompt_len + i, jnp.int32))
+            if sync_each:
+                jax.block_until_ready(logits)
+            if plan is not None:
+                logits, cache = apply_faults(args.prompt_len + i, logits,
+                                             cache)
+            tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[
+                :, None]
+            occ_now = int(alive.sum())
+            if plan is not None:
+                screen(args.prompt_len + i, logits)
+            if i < args.gen - 1:
+                # the final iteration's freshly computed token is discarded
+                toks_emitted[alive] += 1
+            steps_run += 1
+            if observing:
+                jax.block_until_ready(tok)
+                observe_step(args.prompt_len + i, t_step,
+                             int(alive.sum()) if i < args.gen - 1 else 0,
+                             0, occ_now)
+            if past_deadline():
+                finish_rows([r for r in range(args.requests) if alive[r]],
+                            args.prompt_len + i,
+                            SP.TRUNCATED_PREFIX + RES.REASON_DEADLINE)
+                expired = True
+                break
+            if not alive.any():
+                break
+        jax.block_until_ready(tok)
+        t_decode = time.perf_counter() - t0
 
     if observing:
         done_us = now_us()
-        last_step = args.prompt_len + args.gen - 1
+        last_step = max(steps_run - 1, 0)
         if spans_tr is not None:
             for r in range(args.requests):
-                spans_tr.emit(SP.REQ_COMPLETE, ts_us=done_us,
-                              prov=SP.req_prov(r), step=last_step, rid=r,
-                              slot=r, detail=SP.FINISHED, data=(args.gen,))
+                if alive[r]:
+                    spans_tr.emit(SP.REQ_COMPLETE, ts_us=done_us,
+                                  prov=SP.req_prov(r), step=last_step,
+                                  rid=r, slot=r, detail=SP.FINISHED,
+                                  data=(int(toks_emitted[r]),))
         if m is not None:
-            m["fin"].inc(args.requests)
+            m["fin"].inc(int(alive.sum()))
             m["occ"].set(0)
-            if args.gen >= 2:
-                for _ in range(args.requests):
-                    m["dtok"].observe((done_us - first_us)
-                                      / (args.gen - 1))
+            if not expired:
+                for r in range(args.requests):
+                    if alive[r] and toks_emitted[r] >= 2:
+                        m["dtok"].observe((done_us - first_us)
+                                          / (int(toks_emitted[r]) - 1))
 
-    gen = np.concatenate(outs, axis=1)
-    tps = args.requests * args.gen / t_decode
+    tps = int(toks_emitted.sum()) / t_decode if t_decode > 0 else 0.0
     print(f"prefill: {t_prefill:.2f}s   decode: {t_decode:.2f}s "
           f"({tps:.1f} tok/s aggregate)")
-    for r in range(min(args.requests, 2)):
-        print(f"req{r}: prompt={prompts[r, :8].tolist()}... "
-              f"generated={gen[r, :12].tolist()}...")
+    if outs:
+        gen = np.concatenate(outs, axis=1)
+        for r in range(min(args.requests, 2)):
+            print(f"req{r}: prompt={prompts[r, :8].tolist()}... "
+                  f"generated={gen[r, :12].tolist()}...")
+    if resilient:
+        print(f"resilience: faults injected={counts['inj']} "
+              f"detected={counts['det']} "
+              f"dropped={int((~alive).sum())} "
+              f"survivors={int(alive.sum())}")
     if metrics is not None:
         with open(args.metrics_out, "w") as f:
             f.write(metrics.dump_json()
@@ -215,7 +343,7 @@ def main():
         print(f"metrics -> {args.metrics_out}")
     if spans_tr is not None:
         problems = SP.validate(spans_tr.events, slots=args.requests,
-                               engine_steps=args.prompt_len + args.gen)
+                               engine_steps=steps_run)
         assert not problems, problems
         with open(args.spans_out, "w") as f:
             f.write(SP.to_jsonl(spans_tr.events, stable=args.stable))
@@ -223,7 +351,7 @@ def main():
               f"{' (stable)' if args.stable else ''}")
     if layers is not None:
         problems = MPF.validate(layers.records, cfg=cfg,
-                                engine_steps=args.prompt_len + args.gen)
+                                engine_steps=steps_run)
         if spans_tr is not None:
             problems += MPF.join_mismatches(layers.records, spans_tr.events,
                                             cfg=cfg)
@@ -232,7 +360,8 @@ def main():
             f.write(MPF.to_jsonl(layers.records, stable=args.stable))
         print(f"{len(layers.records)} layer records -> "
               f"{args.profile_layers}{' (stable)' if args.stable else ''}")
-    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    finite = np.isfinite(np.asarray(logits, np.float32))
+    assert finite[alive].all() if resilient else finite.all()
     print("OK")
 
 

@@ -67,6 +67,21 @@ checks per new point, mirroring the bench's own contracts:
 
     PYTHONPATH=src python scripts/check_perf_regression.py \
         --model-baseline BENCH_model.json --model-new /tmp/model_new.json
+
+``BENCH_resilience.json`` (the chaos/goodput harness,
+``benchmarks/resilience_bench.py``) is gated via
+``--resilience-baseline``/``--resilience-new``: ``zero_fault`` points
+must keep ``resilience_overhead`` under ``--resilience-overhead``
+(default 5%) and stay token-equivalent to the plain engine; every fault
+campaign must be ``deterministic``, lose zero requests, and hold
+``goodput`` at or above ``--resilience-goodput`` (default 0.90).
+Against the baseline, a campaign's goodput may not drop by more than
+0.05 absolute — goodput is a seeded count ratio, not a wall clock, so
+the band only absorbs intentional campaign retuning, not noise.
+
+    PYTHONPATH=src python scripts/check_perf_regression.py \
+        --resilience-baseline BENCH_resilience.json \
+        --resilience-new /tmp/resilience_new.json
 """
 from __future__ import annotations
 
@@ -208,6 +223,64 @@ def check_model(args) -> Tuple[list, list]:
     return regressions, contract
 
 
+def load_resilience(path: str) -> Dict[tuple, dict]:
+    with open(path) as f:
+        data = json.load(f)
+    out = {}
+    for rec in data.get("records", []):
+        key = (rec["arch"], rec["profile"], rec["campaign"],
+               rec.get("policy", ""), rec.get("fault_rate", 0.0))
+        out[key] = rec
+    return out
+
+
+def check_resilience(args) -> Tuple[list, list]:
+    """Returns (regressions, contract_failures) over the chaos files."""
+    base = load_resilience(args.resilience_baseline) \
+        if args.resilience_baseline else {}
+    new = load_resilience(args.resilience_new)
+    regressions = []
+    contract = []
+    for key, rec in sorted(new.items()):
+        name = "/".join(str(k) for k in key if k != "")
+        if rec["campaign"] == "zero_fault":
+            ovh = float(rec.get("resilience_overhead", 0.0))
+            tag = "ok" if ovh < args.resilience_overhead else "FAIL"
+            print(f"  resilience {name}: overhead={ovh:+.1%} "
+                  f"(limit {args.resilience_overhead:.0%}) {tag}")
+            if ovh >= args.resilience_overhead:
+                contract.append(f"{name}: armed zero-fault overhead "
+                                f"{ovh:+.1%}")
+            if not rec.get("equivalent", False):
+                contract.append(f"{name}: armed engine diverged from "
+                                f"the plain engine")
+            continue
+        goodput = float(rec.get("goodput", 0.0))
+        lost = int(rec.get("lost", 0))
+        det = bool(rec.get("deterministic", False))
+        ok = (goodput >= args.resilience_goodput and lost == 0 and det)
+        print(f"  resilience {name}: goodput={goodput:.2f} "
+              f"(floor {args.resilience_goodput:.2f}) lost={lost} "
+              f"det={det} {'ok' if ok else 'FAIL'}")
+        if goodput < args.resilience_goodput:
+            contract.append(f"{name}: goodput {goodput:.2f} below "
+                            f"{args.resilience_goodput:.2f}")
+        if lost:
+            contract.append(f"{name}: {lost} request(s) lost")
+        if not det:
+            contract.append(f"{name}: chaos replay not deterministic")
+        ref = base.get(key)
+        if ref is None:
+            if base:
+                print(f"  resilience {name}: new point (no baseline)")
+            continue
+        drop = float(ref.get("goodput", 0.0)) - goodput
+        if drop > 0.05:
+            regressions.append(f"{name}: goodput dropped "
+                               f"{drop:.2f} vs baseline")
+    return regressions, contract
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline",
@@ -251,6 +324,16 @@ def main() -> int:
     ap.add_argument("--model-bytes-factor", type=float, default=5.0,
                     help="analytic-vs-HLO bytes ratio band (matches "
                          "repro.obs.modelprof.BYTES_FACTOR)")
+    ap.add_argument("--resilience-baseline",
+                    help="committed BENCH_resilience.json")
+    ap.add_argument("--resilience-new",
+                    help="freshly generated resilience benchmark JSON")
+    ap.add_argument("--resilience-goodput", type=float, default=0.90,
+                    help="minimum goodput every fault campaign in the new "
+                         "resilience file must hold (default 0.90)")
+    ap.add_argument("--resilience-overhead", type=float, default=0.05,
+                    help="max armed-but-idle per-tick overhead in the new "
+                         "resilience file's zero_fault points (default 5%%)")
     args = ap.parse_args()
     if bool(args.baseline) != bool(args.new):
         ap.error("--baseline and --new must be given together")
@@ -258,8 +341,12 @@ def main() -> int:
         ap.error("--serve-baseline requires --serve-new")
     if args.model_baseline and not args.model_new:
         ap.error("--model-baseline requires --model-new")
-    if not args.new and not args.serve_new and not args.model_new:
-        ap.error("give --baseline/--new, --serve-new and/or --model-new")
+    if args.resilience_baseline and not args.resilience_new:
+        ap.error("--resilience-baseline requires --resilience-new")
+    if not args.new and not args.serve_new and not args.model_new \
+            and not args.resilience_new:
+        ap.error("give --baseline/--new, --serve-new, --model-new and/or "
+                 "--resilience-new")
 
     regressions = []
     improved = 0
@@ -319,6 +406,9 @@ def main() -> int:
     model_regressions, model_contract = ([], [])
     if args.model_new:
         model_regressions, model_contract = check_model(args)
+    res_regressions, res_contract = ([], [])
+    if args.resilience_new:
+        res_regressions, res_contract = check_resilience(args)
     if regressions:
         print(f"\nFAIL: {len(regressions)} point(s) regressed beyond "
               f"{args.tolerance:.0%}:")
@@ -341,6 +431,10 @@ def main() -> int:
     if model_regressions or model_contract:
         for msg in model_regressions + model_contract:
             print(f"\nFAIL: model {msg}")
+        return 1
+    if res_regressions or res_contract:
+        for msg in res_regressions + res_contract:
+            print(f"\nFAIL: resilience {msg}")
         return 1
     print(f"\nOK: no regressions (calyx: {improved} improved, "
           f"{len(new)} points checked)")

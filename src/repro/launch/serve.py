@@ -22,8 +22,26 @@ enqueue -> admit -> prefill -> first_token -> complete phase chain; one
 event per engine step carries slot occupancy, queue depth, and tokens
 emitted.  Under a fixed ``--seed`` the span stream is byte-identical across
 runs in the exporter's ``--stable`` mode (wall-clock fields normalized).
+
+Resilience (``repro.launch.resilience`` + ``repro.launch.faults``): the
+engine optionally takes a :class:`~repro.launch.faults.FaultPlan` (seeded,
+replayable step-level fault injection) and a
+:class:`~repro.launch.resilience.ResilienceConfig` (detection + recovery
+policy), each defaulting to ``None`` under the same zero-cost-when-off
+contract as the observability hooks.  With resilience on: sampled logits
+pass a per-step finite-guard; a non-finite slot is quarantined (cache
+positions zeroed, slot released) and its request requeued with capped
+exponential backoff + deterministic jitter, up to ``max_attempts``;
+injected step exceptions abort the step without mutating any request;
+per-request TTFT/completion deadlines and a bounded queue with pluggable
+shedding run admission control; engine health walks
+healthy -> degraded -> draining.  Deadlines and backoff are measured on a
+virtual *tick* clock (engine steps + latency-spike penalties), never wall
+time, so the whole failure/recovery schedule is deterministic under a seed
+and the chaos span streams stay byte-identical in ``--stable`` mode.
 """
 import argparse
+import functools
 import time
 from typing import List, Optional, Sequence, Tuple
 
@@ -31,6 +49,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.launch import faults as FLT
+from repro.launch import resilience as RES
 from repro.models import decode, get_config
 from repro.models import params as MP
 from repro.obs import MetricsRegistry, SpanTracer, spans as SP, traffic
@@ -39,7 +59,8 @@ from repro.obs import modelprof as MPF
 
 
 class Request:
-    def __init__(self, rid: int, prompt: np.ndarray, gen: int):
+    def __init__(self, rid: int, prompt: np.ndarray, gen: int,
+                 deadline_ticks: int = 0, ttft_deadline_ticks: int = 0):
         self.rid = rid
         self.prompt = prompt
         self.gen = gen
@@ -48,6 +69,20 @@ class Request:
         self.reason = ""          # set on completion
         self.enqueue_us = -1      # engine-epoch stamps (observability only)
         self.first_token_us = -1
+        # resilience state (all deterministic; ticks, not wall time)
+        self.attempt = 1
+        self.enqueue_tick = -1    # first-submit tick (-1 = never offered)
+        self.deadline_ticks = deadline_ticks        # per-request override
+        self.ttft_deadline_ticks = ttft_deadline_ticks
+        self.deadline_end = -1    # absolute tick bounds (-1 = none)
+        self.ttft_end = -1
+        self.ttft_seen = False    # first token emitted (any attempt)
+        self.ttft_observed = False  # TTFT recorded once (metrics only)
+
+    @property
+    def est_tokens(self) -> int:
+        """Footprint estimate for token-budget admission control."""
+        return len(self.prompt) + self.gen
 
 
 def serve_metrics(reg: MetricsRegistry, cfg, slots: int, cache) -> dict:
@@ -64,7 +99,7 @@ def serve_metrics(reg: MetricsRegistry, cfg, slots: int, cache) -> dict:
               "cache positions available").set(st["cache_max_len"])
     reg.gauge("serve_approx_flops_per_token",
               "2 x active params").set(st["approx_flops_per_token"])
-    return {
+    m = {
         "enq": reg.counter("serve_requests_enqueued_total",
                            "requests submitted to the queue"),
         "adm": reg.counter("serve_requests_admitted_total",
@@ -88,7 +123,33 @@ def serve_metrics(reg: MetricsRegistry, cfg, slots: int, cache) -> dict:
                               "enqueue to first generated token"),
         "dtok": reg.histogram("serve_decode_token_us",
                               "steady-state per-token decode latency"),
+        "retry": reg.counter("serve_retries_total",
+                             "slot quarantines that requeued the victim"),
+        "finj": reg.counter("serve_faults_injected_total",
+                            "faults injected by the active FaultPlan"),
+        "fdet": reg.counter("serve_faults_detected_total",
+                            "faults caught by the finite-guard or step "
+                            "exception handler"),
+        "rej": reg.counter("serve_queue_rejections_total",
+                           "submissions bounced by admission control "
+                           "(retryable by the client)"),
+        "health": reg.gauge("serve_engine_health",
+                            "0 healthy / 1 degraded / 2 draining"),
     }
+    for reason in RES.REASONS:
+        m["trunc_" + reason] = reg.counter(
+            f"serve_requests_truncated_{reason}_total",
+            f"requests truncated with reason {reason!r}")
+    return m
+
+
+@functools.lru_cache(maxsize=None)
+def _guarded_argmax():
+    """Fused sample + finite-screen: one dispatch returns the argmax row
+    per slot and whether every logit in that row is finite."""
+    return jax.jit(lambda last: (
+        jnp.argmax(last, axis=-1).astype(jnp.int32),
+        jnp.all(jnp.isfinite(last), axis=-1)))
 
 
 class Engine:
@@ -97,7 +158,9 @@ class Engine:
     def __init__(self, cfg, params, slots: int, max_len: int,
                  metrics: Optional[MetricsRegistry] = None,
                  spans: Optional[SpanTracer] = None,
-                 layers: Optional["LayerProfiler"] = None):
+                 layers: Optional["LayerProfiler"] = None,
+                 faults: Optional[FLT.FaultPlan] = None,
+                 resilience: Optional[RES.ResilienceConfig] = None):
         self.cfg = cfg
         self.params = params
         self.slots: List[Optional[Request]] = [None] * slots
@@ -120,6 +183,23 @@ class Engine:
         self.queue: List[Request] = []
         self.done: List[Request] = []
         self.spans = spans
+        # resilience state — all structural (tick clock, not wall time)
+        self.faults = faults
+        self.res = resilience
+        self._tick = 0            # steps + latency-spike penalty ticks
+        self.delayed: List[Tuple[int, Request]] = []  # (due_tick, victim)
+        self.health = RES.HEALTHY
+        self.health_ticks = {RES.HEALTHY: 0, RES.DEGRADED: 0,
+                             RES.DRAINING: 0}
+        self._clean = 0           # consecutive fault-free steps
+        self._fault_ticks: List[int] = []
+        self.faults_injected = 0
+        self.faults_detected = 0
+        self.retries = 0
+        if resilience is not None and resilience.token_budget > 0:
+            self._token_budget = resilience.token_budget
+        else:
+            self._token_budget = slots * max_len
         # one clock for every stamp: when a tracer is attached its epoch is
         # the authoritative one (span events default to tracer time), so the
         # metrics-side stamps must read the same clock or phase timestamps
@@ -139,24 +219,149 @@ class Engine:
     def inflight(self) -> int:
         return sum(s is not None for s in self.slots)
 
+    # -- health state machine ------------------------------------------------
+
+    def _set_health(self, state: str) -> None:
+        if state == self.health:
+            return
+        self.health = state
+        if self.spans is not None:
+            self.spans.emit(SP.HEALTH, prov=("engine",), step=self.steps,
+                            detail=state, data=(RES.HEALTH_CODE[state],))
+        if self._m is not None:
+            self._m["health"].set(RES.HEALTH_CODE[state])
+
+    def _record_fault(self) -> None:
+        """A fault was *detected* this step: degrade, maybe drain."""
+        self._clean = 0
+        res = self.res
+        if res.drain_faults > 0:
+            self._fault_ticks.append(self._tick)
+            self._fault_ticks = [t for t in self._fault_ticks
+                                 if t > self._tick - res.drain_window]
+            if len(self._fault_ticks) >= res.drain_faults:
+                self._set_health(RES.DRAINING)
+                return
+        if self.health == RES.HEALTHY:
+            self._set_health(RES.DEGRADED)
+
+    def _health_step(self, detected: bool) -> None:
+        if self.res is None:
+            return
+        if not detected:
+            self._clean += 1
+            if self.health == RES.DEGRADED \
+                    and self._clean >= self.res.recovery_ticks:
+                self._set_health(RES.HEALTHY)
+        self.health_ticks[self.health] += 1
+
     # -- queue lifecycle -----------------------------------------------------
 
-    def submit(self, req: Request) -> None:
-        self.queue.append(req)
-        if self.spans is not None or self._m is not None:
-            now = self._now_us()
-            req.enqueue_us = now
-            if self.spans is not None:
-                self.spans.emit(SP.REQ_ENQUEUE, ts_us=now,
-                                prov=SP.req_prov(req.rid), step=self.steps,
-                                rid=req.rid)
+    def submit(self, req: Request) -> str:
+        """Offer a request.  Returns ``"queued"``, ``"rejected"``
+        (admission control bounced it — the client may retry),
+        ``"shed"`` (terminally dropped), or ``"deadline"``."""
+        if req.enqueue_tick < 0:
+            # first offer: stamp the span + absolute deadline bounds once,
+            # before any admission decision — rejected requests were still
+            # *offered* and must carry an enqueue event
+            req.enqueue_tick = self._tick
+            res = self.res
+            dl = req.deadline_ticks or (res.deadline_ticks if res else 0)
+            req.deadline_end = req.enqueue_tick + dl if dl > 0 else -1
+            tdl = req.ttft_deadline_ticks or \
+                (res.ttft_deadline_ticks if res else 0)
+            req.ttft_end = req.enqueue_tick + tdl if tdl > 0 else -1
+            if self.spans is not None or self._m is not None:
+                now = self._now_us()
+                req.enqueue_us = now
+                if self.spans is not None:
+                    self.spans.emit(SP.REQ_ENQUEUE, ts_us=now,
+                                    prov=SP.req_prov(req.rid),
+                                    step=self.steps, rid=req.rid)
+                if self._m is not None:
+                    self._m["enq"].inc()
+        res = self.res
+        if res is None:
+            self.queue.append(req)
             if self._m is not None:
-                self._m["enq"].inc()
+                self._m["qd"].set(len(self.queue))
+            return "queued"
+        if self.health == RES.DRAINING:
+            self._finish(req, SP.TRUNCATED_PREFIX + RES.REASON_SHED)
+            return "shed"
+        if req.deadline_end >= 0 and self._tick >= req.deadline_end:
+            # a client retry arrived after the request's own deadline
+            self._finish(req, SP.TRUNCATED_PREFIX + RES.REASON_DEADLINE)
+            return "deadline"
+        if res.queue_cap and len(self.queue) >= res.queue_cap:
+            if res.shed_policy == RES.POLICY_SHED_OLDEST:
+                self._finish(self.queue.pop(0),
+                             SP.TRUNCATED_PREFIX + RES.REASON_SHED)
+            else:
+                if self._m is not None:
+                    self._m["rej"].inc()
+                return "rejected"
+        if res.shed_policy == RES.POLICY_TOKEN_BUDGET:
+            est = req.est_tokens + sum(q.est_tokens for q in self.queue)
+            if est > self._token_budget:
+                if self._m is not None:
+                    self._m["rej"].inc()
+                return "rejected"
+        self.queue.append(req)
+        if self._m is not None:
+            self._m["qd"].set(len(self.queue))
+        return "queued"
+
+    def shed(self, req: Request) -> None:
+        """Terminally drop an offered-but-unqueued request (e.g. the
+        client gave up retrying a rejection)."""
+        self._finish(req, SP.TRUNCATED_PREFIX + RES.REASON_SHED)
+
+    def _release_delayed(self) -> None:
+        """Move due backed-off victims to the queue front (retries jump
+        the line — they have already waited).  When the engine is
+        otherwise idle, fast-forward the tick clock to the earliest due
+        retry instead of spinning empty steps."""
+        if not self.delayed:
+            return
+        if not self.inflight and not self.queue:
+            earliest = min(t for t, _ in self.delayed)
+            if earliest > self._tick:
+                self._tick = earliest
+        due = sorted(((t, r.rid, r) for t, r in self.delayed
+                      if t <= self._tick))
+        if not due:
+            return
+        self.delayed = [(t, r) for t, r in self.delayed if t > self._tick]
+        self.queue[:0] = [r for _, _, r in due]
+        if self._m is not None:
+            self._m["qd"].set(len(self.queue))
+
+    def _sweep_queue_deadlines(self) -> None:
+        """Expire queued requests that can no longer meet their deadline
+        (even if admitted right now, completion lands past the bound)."""
+        if self.res is None:
+            return
+        keep: List[Request] = []
+        for r in self.queue:
+            if (r.deadline_end >= 0 and self._tick >= r.deadline_end) or \
+                    (r.ttft_end >= 0 and not r.ttft_seen
+                     and self._tick >= r.ttft_end):
+                self._finish(r, SP.TRUNCATED_PREFIX + RES.REASON_DEADLINE)
+            else:
+                keep.append(r)
+        if len(keep) != len(self.queue):
+            self.queue[:] = keep
+            if self._m is not None:
                 self._m["qd"].set(len(self.queue))
 
     def admit(self, queue: Optional[List[Request]] = None) -> None:
         """Fill free slots from ``queue`` (default: the engine's own)."""
         q = self.queue if queue is None else queue
+        if queue is None:
+            self._release_delayed()
+            self._sweep_queue_deadlines()
         for i, slot in enumerate(self.slots):
             if slot is None and q:
                 r = q.pop(0)
@@ -169,49 +374,121 @@ class Engine:
                     self._m["qd"].set(len(self.queue))
                     self._m["occ"].set(self.inflight)
 
+    def _finish(self, r: Request, detail: str, slot: int = -1) -> None:
+        """Shared terminal bookkeeping: span, per-reason counters, dtok."""
+        r.reason = detail
+        self.done.append(r)
+        if self.spans is not None:
+            self.spans.emit(SP.REQ_COMPLETE, prov=SP.req_prov(r.rid),
+                            step=self.steps, rid=r.rid, slot=slot,
+                            detail=detail, data=(len(r.out),))
+        if self._m is not None:
+            m = self._m
+            if detail == SP.FINISHED:
+                m["fin"].inc()
+            else:
+                m["trunc"].inc()
+                key = "trunc_" + detail[len(SP.TRUNCATED_PREFIX):]
+                if key in m:
+                    m[key].inc()
+            m["occ"].set(self.inflight)
+            m["qd"].set(len(self.queue))
+            if slot >= 0 and len(r.out) >= 2 and r.first_token_us >= 0:
+                m["dtok"].observe((self._now_us() - r.first_token_us)
+                                  / (len(r.out) - 1))
+
     def _complete(self, i: int, reason: str) -> None:
         r = self.slots[i]
         assert r is not None
         self.slots[i] = None
-        r.reason = reason
-        self.done.append(r)
-        if self.spans is not None:
-            self.spans.emit(SP.REQ_COMPLETE, prov=SP.req_prov(r.rid),
-                            step=self.steps, rid=r.rid, slot=i,
-                            detail=reason, data=(len(r.out),))
-        if self._m is not None:
-            m = self._m
-            (m["fin"] if reason == SP.FINISHED else m["trunc"]).inc()
-            m["occ"].set(self.inflight)
-            if len(r.out) >= 2 and r.first_token_us >= 0:
-                m["dtok"].observe((self._now_us() - r.first_token_us)
-                                  / (len(r.out) - 1))
+        self._finish(r, reason, slot=i)
 
     def truncate_all(self, reason: str) -> None:
-        """Release every in-flight and queued request as truncated."""
+        """Release every in-flight, queued, and backed-off request."""
         detail = SP.TRUNCATED_PREFIX + reason
         for i, r in enumerate(self.slots):
             if r is not None:
                 self._complete(i, detail)
         while self.queue:
-            r = self.queue.pop(0)
-            r.reason = detail
-            self.done.append(r)
-            if self.spans is not None:
-                self.spans.emit(SP.REQ_COMPLETE, prov=SP.req_prov(r.rid),
-                                step=self.steps, rid=r.rid, detail=detail,
-                                data=(len(r.out),))
-            if self._m is not None:
-                self._m["trunc"].inc()
-                self._m["qd"].set(len(self.queue))
+            self._finish(self.queue.pop(0), detail)
+        for _, _, r in sorted((t, r.rid, r) for t, r in self.delayed):
+            self._finish(r, detail)
+        self.delayed = []
+
+    def _enforce_deadlines(self) -> None:
+        """End-of-step deadline pass over in-flight requests (end of step
+        so the release never contradicts the step's occupancy snapshot)."""
+        if self.res is None:
+            return
+        for i, r in enumerate(self.slots):
+            if r is None:
+                continue
+            if (r.deadline_end >= 0 and self._tick > r.deadline_end) or \
+                    (r.ttft_end >= 0 and not r.ttft_seen
+                     and self._tick > r.ttft_end):
+                self._complete(i, SP.TRUNCATED_PREFIX + RES.REASON_DEADLINE)
 
     # -- the engine step -----------------------------------------------------
 
+    def _abort_step(self, observing: bool, t0: float, spike_ticks: int,
+                    spike_us: int) -> None:
+        """An injected (or caught) step exception: the whole lockstep batch
+        loses the step — no tokens, no cache advance, ``pos`` frozen — but
+        the step still counts, ticks, and carries a span."""
+        self._record_fault()
+        if spike_us:
+            time.sleep(spike_us / 1e6)
+        occupied = self.inflight
+        if observing:
+            now = self._now_us()
+            wall_us = int((time.perf_counter() - t0) * 1e6)
+        if self.spans is not None:
+            self.spans.emit(SP.STEP, prov=SP.step_prov(self.steps),
+                            step=self.steps, detail="fault:exception",
+                            dur_us=wall_us,
+                            data=(occupied, len(self.queue), 0, 0))
+        if self._m is not None:
+            self._m["steps"].inc()
+            self._m["step_h"].observe(wall_us)
+        self._health_step(detected=True)
+        self._tick += 1 + spike_ticks
+        self._enforce_deadlines()
+        self.steps += 1
+
     def step(self) -> None:
+        pending = self.faults.at(self.steps) if self.faults is not None \
+            else ()
         observing = self.spans is not None or self._m is not None
         t0 = time.perf_counter() if observing else 0.0
+        spike_ticks = 0
+        spike_us = 0
+        injected = 0
+        n_exc = 0
+        for f in pending:
+            if f.kind == FLT.LATENCY_SPIKE:
+                injected += 1
+                spike_ticks += f.spike_ticks
+                spike_us += f.spike_us
+            elif f.kind == FLT.EXCEPTION:
+                injected += 1
+                n_exc += 1
+        if n_exc:
+            # injected before any request mutation, so the aborted step
+            # needs no rollback
+            self.faults_injected += injected
+            if self._m is not None:
+                self._m["finj"].inc(injected)
+            if self.res is None:
+                raise FLT.InjectedFault(
+                    f"injected step exception at step {self.steps}")
+            self.faults_detected += n_exc
+            if self._m is not None:
+                self._m["fdet"].inc(n_exc)
+            self._abort_step(observing, t0, spike_ticks, spike_us)
+            return
         toks = np.zeros((len(self.slots), 1), np.int32)
         prefill_started: List[int] = []
+        fed_slots: List[int] = []
         prefill_fed = 0
         for i, r in enumerate(self.slots):
             if r is None:
@@ -221,6 +498,7 @@ class Engine:
                     prefill_started.append(r.rid)
                 toks[i, 0] = r.prompt[r.fed]
                 r.fed += 1
+                fed_slots.append(i)
                 prefill_fed += 1
             elif r.out:
                 toks[i, 0] = r.out[-1]
@@ -230,28 +508,73 @@ class Engine:
                                 step=self.steps, rid=rid)
         occupied = self.inflight
         seg_walls: Optional[List[float]] = None
-        if self._prof is not None:
-            logits, self.cache, seg_walls = self._prof(
-                self.params, self.cache, jnp.asarray(toks),
-                jnp.asarray(self.pos, jnp.int32))
+        try:
+            if self._prof is not None:
+                logits, self.cache, seg_walls = self._prof(
+                    self.params, self.cache, jnp.asarray(toks),
+                    jnp.asarray(self.pos, jnp.int32))
+            else:
+                logits, self.cache = self._step(
+                    self.params, self.cache, jnp.asarray(toks),
+                    jnp.asarray(self.pos, jnp.int32))
+        except Exception:
+            if self.res is None:
+                raise
+            # genuine runtime failure: roll back this step's prompt feeds
+            # (no cache was written) and degrade instead of crashing
+            for i in fed_slots:
+                r = self.slots[i]
+                if r is not None:
+                    r.fed -= 1
+            self.faults_detected += 1
+            if self._m is not None:
+                self._m["fdet"].inc()
+            self._abort_step(observing, t0, spike_ticks, spike_us)
+            return
+        last = logits[:, -1]
+        for f in pending:
+            if f.kind in (FLT.NAN_LOGITS, FLT.INF_LOGITS):
+                injected += 1
+                bad_val = jnp.nan if f.kind == FLT.NAN_LOGITS else jnp.inf
+                last = last.at[f.slot].set(bad_val)
+        if self.res is not None and self.res.finite_guard:
+            nxt_d, fin_d = _guarded_argmax()(last)
+            nxt = np.asarray(nxt_d, np.int32)
+            finite = np.asarray(fin_d)
         else:
-            logits, self.cache = self._step(self.params, self.cache,
-                                            jnp.asarray(toks),
-                                            jnp.asarray(self.pos, jnp.int32))
-        nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)
+            nxt = np.asarray(jnp.argmax(last, axis=-1), np.int32)
+            finite = None
+        for f in pending:
+            if f.kind == FLT.CACHE_CORRUPT:
+                # applied after the step's cache write: silent until the
+                # poison reaches the slot's logits on a later step
+                injected += 1
+                self.cache = decode.corrupt_cache_slot(self.cfg, self.cache,
+                                                       f.slot)
+        if injected:
+            self.faults_injected += injected
+            if self._m is not None:
+                self._m["finj"].inc(injected)
         # the argmax transfer above already forced the logits; block on the
         # cache too so every wall-clock stamp below is post-device-sync
         jax.block_until_ready(self.cache)
+        if spike_us:
+            time.sleep(spike_us / 1e6)
+        bad: List[int] = []
+        if finite is not None:
+            bad = [i for i, r in enumerate(self.slots)
+                   if r is not None and not bool(finite[i])]
         new_tokens = 0
         first_token: List[int] = []
         completed: List[int] = []
         for i, r in enumerate(self.slots):
-            if r is None:
+            if r is None or i in bad:
                 continue
             if r.fed >= len(r.prompt):
                 r.out.append(int(nxt[i]))
                 new_tokens += 1
                 if len(r.out) == 1:
+                    r.ttft_seen = True
                     first_token.append(i)
                 if len(r.out) >= r.gen:
                     completed.append(i)
@@ -266,10 +589,17 @@ class Engine:
                     self.spans.emit(SP.REQ_FIRST_TOKEN, ts_us=now,
                                     prov=SP.req_prov(r.rid), step=self.steps,
                                     rid=r.rid, slot=i)
-                if self._m is not None and r.enqueue_us >= 0:
+                if self._m is not None and r.enqueue_us >= 0 \
+                        and not r.ttft_observed:
+                    # once per request: a retried victim keeps its original
+                    # TTFT; the -1 sentinel can never reach the histogram
+                    # because observation happens only at emission time
                     self._m["ttft"].observe(now - r.enqueue_us)
+                    r.ttft_observed = True
         for i in completed:
             self._complete(i, SP.FINISHED)
+        for i in bad:
+            self._quarantine(i)
         if self.spans is not None:
             self.spans.emit(SP.STEP, prov=SP.step_prov(self.steps),
                             step=self.steps, dur_us=wall_us,
@@ -289,14 +619,52 @@ class Engine:
             self.layers.on_step(
                 self.steps, self._prof.ops, seg_walls,
                 ts_us=now if self.spans is not None else None)
+        self._health_step(detected=bool(bad))
+        self._tick += 1 + spike_ticks
+        self._enforce_deadlines()
         self.pos += 1
         self.steps += 1
+
+    def _quarantine(self, i: int) -> None:
+        """Non-finite logits on slot ``i``: zero the slot's cache
+        positions, release the slot, and either requeue the victim with
+        backoff or terminate it when attempts are exhausted."""
+        r = self.slots[i]
+        assert r is not None
+        self.faults_detected += 1
+        if self._m is not None:
+            self._m["fdet"].inc()
+        self._record_fault()
+        self.cache = decode.reset_cache_slot(self.cfg, self.cache, i)
+        res = self.res
+        if r.attempt >= res.max_attempts:
+            reason = RES.REASON_FAULT if res.max_attempts == 1 \
+                else RES.REASON_RETRY_EXHAUSTED
+            self._complete(i, SP.TRUNCATED_PREFIX + reason)
+            return
+        self.slots[i] = None
+        failed = r.attempt
+        r.attempt += 1
+        r.out = []
+        r.fed = 0
+        r.first_token_us = -1
+        delay = RES.backoff_ticks(res, r.rid, failed)
+        self.delayed.append((self._tick + 1 + delay, r))
+        self.retries += 1
+        if self.spans is not None:
+            self.spans.emit(SP.REQ_RETRY, prov=SP.req_prov(r.rid),
+                            step=self.steps, rid=r.rid, slot=i,
+                            detail=SP.QUARANTINE_PREFIX + "nonfinite",
+                            data=(failed, delay))
+        if self._m is not None:
+            self._m["retry"].inc()
+            self._m["occ"].set(self.inflight)
 
     # -- drivers -------------------------------------------------------------
 
     def run(self) -> None:
-        """Drain the queue and all in-flight work."""
-        while self.queue or self.inflight:
+        """Drain the queue, backed-off retries, and all in-flight work."""
+        while self.queue or self.inflight or self.delayed:
             if self.pos >= self.max_len - 1:
                 self.truncate_all("max_len")
                 break
@@ -316,30 +684,63 @@ class ReplayDriver:
     comparison pairs wall-clock samples taken milliseconds apart —
     back-to-back full runs would be seconds apart and CPU load drift
     swamps the signal.
+
+    Admission-control rejections are retryable: the driver plays the
+    client, resubmitting a bounced request with doubling step backoff up
+    to ``client_retries`` times before giving up and shedding it — so
+    every offered request still terminates with an explicit reason.
     """
 
     def __init__(self, eng: Engine,
-                 arrivals: Sequence[Tuple[int, Request]]) -> None:
+                 arrivals: Sequence[Tuple[int, Request]],
+                 client_retries: int = 4) -> None:
         self.eng = eng
         self.arrivals = arrivals
         self._order = sorted(range(len(arrivals)),
                              key=lambda j: (arrivals[j][0],
                                             arrivals[j][1].rid))
         self._i = 0
+        self.client_retries = client_retries
+        self._pending: List[Tuple[int, int, Request]] = []  # (due, tries, r)
 
     @property
     def active(self) -> bool:
-        return (self._i < len(self.arrivals) or bool(self.eng.queue)
+        return (self._i < len(self.arrivals) or bool(self._pending)
+                or bool(self.eng.queue) or bool(self.eng.delayed)
                 or bool(self.eng.inflight))
+
+    def _offer(self, req: Request, tries: int = 0) -> None:
+        if self.eng.submit(req) == "rejected":
+            if tries >= self.client_retries:
+                self.eng.shed(req)
+            else:
+                self._pending.append((self.eng.steps + (2 << tries),
+                                      tries + 1, req))
 
     def _submit_due(self, all_remaining: bool = False) -> None:
         eng = self.eng
+        if self._pending:
+            due = [(d, t, r) for d, t, r in self._pending
+                   if all_remaining or d <= eng.steps]
+            if due:
+                self._pending = [p for p in self._pending if p not in due]
+                for d, t, r in sorted(due, key=lambda p: (p[0], p[2].rid)):
+                    self._offer(r, t)
         while self._i < len(self.arrivals) and (
                 all_remaining
                 or self.arrivals[self._order[self._i]][0] <= eng.steps
-                or (not eng.inflight and not eng.queue)):
-            eng.submit(self.arrivals[self._order[self._i]][1])
+                or (not eng.inflight and not eng.queue and not eng.delayed
+                    and not self._pending)):
+            self._offer(self.arrivals[self._order[self._i]][1])
             self._i += 1
+
+    def _flush(self) -> None:
+        """Force every not-yet-offered request into the engine and shed
+        anything still bouncing, so ``truncate_all`` accounts for all."""
+        self._submit_due(all_remaining=True)
+        while self._pending:
+            _, _, r = self._pending.pop(0)
+            self.eng.shed(r)
 
     def tick(self) -> bool:
         """One scheduler round; returns True if an engine step ran."""
@@ -348,7 +749,7 @@ class ReplayDriver:
         eng = self.eng
         self._submit_due()
         if eng.pos >= eng.max_len - 1:
-            self._submit_due(all_remaining=True)
+            self._flush()
             eng.truncate_all("max_len")
             return False
         eng.admit()
@@ -386,6 +787,23 @@ def main():
     ap.add_argument("--stable", action="store_true",
                     help="normalize wall-clock fields in the span/layer "
                          "exports (byte-identical across same-seed runs)")
+    ap.add_argument("--fault-plan", default="",
+                    help="replay a FaultPlan JSON (repro.launch.faults); "
+                         "auto-enables resilience")
+    ap.add_argument("--deadline-steps", type=int, default=0,
+                    help="per-request completion deadline in engine ticks "
+                         "(0 = none); auto-enables resilience")
+    ap.add_argument("--ttft-deadline-steps", type=int, default=0,
+                    help="per-request TTFT deadline in engine ticks")
+    ap.add_argument("--queue-cap", type=int, default=0,
+                    help="bound the queue (0 = unbounded)")
+    ap.add_argument("--shed-policy", default=RES.POLICY_REJECT_NEWEST,
+                    choices=RES.SHED_POLICIES)
+    ap.add_argument("--max-attempts", type=int, default=3,
+                    help="total tries per request incl. the first")
+    ap.add_argument("--resilience", action="store_true",
+                    help="enable the resilience layer even with no faults "
+                         "or deadlines configured")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
@@ -397,6 +815,20 @@ def main():
         max_len = per_req * args.requests + 8
     else:
         max_len = per_req * (1 + args.requests // args.slots) + 8
+
+    resilient = (args.resilience or args.fault_plan or args.deadline_steps
+                 or args.ttft_deadline_steps or args.queue_cap)
+    res = RES.ResilienceConfig(
+        max_attempts=args.max_attempts, queue_cap=args.queue_cap,
+        shed_policy=args.shed_policy, deadline_ticks=args.deadline_steps,
+        ttft_deadline_ticks=args.ttft_deadline_steps,
+        seed=args.seed) if resilient else None
+    plan = FLT.FaultPlan.load(args.fault_plan) if args.fault_plan else None
+    if plan is not None or res is not None:
+        # retries replay whole requests and exception faults freeze pos:
+        # give the step budget headroom so chaos runs end by draining, not
+        # by tripping the max_len guard
+        max_len = max_len * 2 + 64
 
     trace = traffic.synth_trace(args.seed, args.requests, args.arrival_mean,
                                 [args.prompt_len], [args.gen])
@@ -411,7 +843,8 @@ def main():
     spans_tr = SpanTracer() if args.spans_out else None
     layers = LayerProfiler() if args.profile_layers else None
     eng = Engine(cfg, params, args.slots, max_len,
-                 metrics=metrics, spans=spans_tr, layers=layers)
+                 metrics=metrics, spans=spans_tr, layers=layers,
+                 faults=plan, resilience=res)
 
     t0 = time.perf_counter()
     replay(eng, arrivals)
@@ -428,6 +861,11 @@ def main():
     if truncated:
         print(f"[serve] {len(truncated)} truncated: "
               f"{sorted(set(r.reason for r in truncated))}")
+    if plan is not None or res is not None:
+        print(f"[serve] resilience: {eng.faults_injected} faults injected, "
+              f"{eng.faults_detected} detected, {eng.retries} retries, "
+              f"goodput {len(finished) / max(args.requests, 1):.3f}, "
+              f"health={eng.health}")
     if metrics is not None:
         ttft = metrics.get("serve_ttft_us")
         print(f"[serve] ttft p50={ttft.quantile(0.5):.0f}us "
@@ -458,7 +896,8 @@ def main():
         print(f"[serve] {len(layers.records)} layer records -> "
               f"{args.profile_layers}{' (stable)' if args.stable else ''}")
     assert len(eng.done) == args.requests, "requests lost by the engine"
-    assert len(finished) == args.requests, "not all requests completed"
+    if plan is None and res is None:
+        assert len(finished) == args.requests, "not all requests completed"
     print("OK")
 
 

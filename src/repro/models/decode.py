@@ -339,6 +339,64 @@ def step_stats(cfg: ModelConfig, cache) -> Dict[str, int]:
 
 
 # ---------------------------------------------------------------------------
+# Per-slot cache surgery (quarantine + fault injection — ``repro.launch``)
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def cache_batch_axes(cfg: ModelConfig):
+    """Tree (matching the fused cache structure) giving each cache leaf's
+    batch-axis index, discovered by diffing shape templates at two batch
+    sizes — the one differing dim per leaf is the batch axis.  Robust to
+    family layout (dense KV at axis 1 behind the group axis, vlm/hybrid
+    inner layer stacking at axis 1 pushing batch to 2, ssm state tensors
+    with no length dim) without per-family switch statements."""
+    s2, s3 = cache_shapes(cfg, 2, 8), cache_shapes(cfg, 3, 8)
+
+    def ax(a, b):
+        diff = [i for i, (x, y) in enumerate(zip(a, b)) if x != y]
+        if len(diff) != 1:
+            raise ValueError(f"ambiguous batch axis for cache leaf {a}")
+        return diff[0]
+
+    return jax.tree.map(ax, s2, s3, is_leaf=lambda x: isinstance(x, tuple))
+
+
+def _map_slot(cfg: ModelConfig, cache, fn):
+    """Apply ``fn(leaf, batch_axis)`` across a fused cache tree or the
+    per-group list form (``ProfiledServeStep``), where the sliced-off
+    group axis shifts every batch axis down by one."""
+    axes = cache_batch_axes(cfg)
+    if isinstance(cache, list):
+        return [jax.tree.map(lambda leaf, ax: fn(leaf, ax - 1), g, axes)
+                for g in cache]
+    return jax.tree.map(fn, cache, axes)
+
+
+def reset_cache_slot(cfg: ModelConfig, cache, slot: int):
+    """Zero one batch slot across every cache leaf (slot quarantine: the
+    replacement request re-prefills from position 0, so stale or corrupted
+    state must not survive).  Returns the updated cache."""
+    def zero(leaf, ax):
+        idx = (slice(None),) * ax + (slot,)
+        return leaf.at[idx].set(jnp.zeros((), leaf.dtype))
+    return _map_slot(cfg, cache, zero)
+
+
+def corrupt_cache_slot(cfg: ModelConfig, cache, slot: int):
+    """Silently poison one batch slot: NaN into every floating cache leaf
+    (int8 KV payloads cannot hold NaN — their float32 scale leaves carry
+    the poison instead, which contaminates the dequantized values the same
+    way).  Fault-injection only; returns the updated cache."""
+    def poison(leaf, ax):
+        if not jnp.issubdtype(leaf.dtype, jnp.floating):
+            return leaf
+        idx = (slice(None),) * ax + (slot,)
+        return leaf.at[idx].set(jnp.nan)
+    return _map_slot(cfg, cache, poison)
+
+
+# ---------------------------------------------------------------------------
 # Per-operator sliced serve step (layer profiling — ``repro.obs.modelprof``)
 # ---------------------------------------------------------------------------
 

@@ -22,10 +22,20 @@ kind                meaning
 ``req:first_token`` first generated token emitted (TTFT stamp)
 ``req:complete``    slot released; ``detail`` = ``finished`` or
                     ``truncated:<reason>``; ``data`` = (tokens_generated,)
+``req:retry``       slot quarantined and the request requeued for another
+                    attempt; ``detail`` = ``quarantine:<cause>``;
+                    ``data`` = (attempt_just_failed, backoff_ticks).
+                    Splits the request span into attempts — phases after
+                    a retry restart from ``admit``
 ``step``            one engine step; ``data`` = (slots_occupied,
                     queue_depth, tokens_emitted, prompt_tokens_fed);
                     ``dur_us`` = step wall time, stamped only after
-                    ``jax.block_until_ready`` on the step outputs
+                    ``jax.block_until_ready`` on the step outputs; a
+                    step lost to an injected exception carries
+                    ``detail`` = ``fault:exception``
+``engine:health``   engine health transition; ``detail`` = the new state
+                    (``healthy``/``degraded``/``draining``), ``data`` =
+                    (state_code,)
 ==================  =========================================================
 
 Provenance: request events carry ``("req<rid>",)``; step events carry
@@ -56,16 +66,21 @@ REQ_ADMIT = "req:admit"
 REQ_PREFILL = "req:prefill"
 REQ_FIRST_TOKEN = "req:first_token"
 REQ_COMPLETE = "req:complete"
+REQ_RETRY = "req:retry"
 STEP = "step"
+HEALTH = "engine:health"
 
 REQ_KINDS = (REQ_ENQUEUE, REQ_ADMIT, REQ_PREFILL, REQ_FIRST_TOKEN,
              REQ_COMPLETE)
-# the phase order every request must respect (missing phases are allowed
-# for truncated requests, but present ones must appear in this order)
+# the phase order every request must respect within one attempt (missing
+# phases are allowed for truncated requests, but present ones must appear
+# in this order); a REQ_RETRY marker ends an attempt and the next one
+# restarts from REQ_ADMIT
 PHASE_ORDER = {k: i for i, k in enumerate(REQ_KINDS)}
 
 FINISHED = "finished"
 TRUNCATED_PREFIX = "truncated:"
+QUARANTINE_PREFIX = "quarantine:"
 
 
 def req_prov(rid: int) -> Tuple[str, ...]:
@@ -165,6 +180,7 @@ class RequestSummary:
     reason: str = ""
     tokens: int = 0
     slot: int = -1
+    attempts: int = 1
 
     @property
     def ttft_us(self) -> int:
@@ -200,6 +216,9 @@ def summarize(events: Sequence[SpanEvent]) -> Dict[int, RequestSummary]:
         if ev.kind == REQ_COMPLETE:
             s.reason = ev.detail
             s.tokens = ev.data[0] if ev.data else 0
+    for ev in events:
+        if ev.kind == REQ_RETRY and ev.rid in spans:
+            spans[ev.rid].attempts += 1
     return spans
 
 
@@ -211,14 +230,19 @@ def validate(events: Sequence[SpanEvent], slots: int = 0,
     """Span lifecycle invariants; returns violation strings (empty = ok).
 
     * every enqueued request completes (``finished``) or is truncated with
-      a reason;
-    * per-request phase timestamps are monotone non-decreasing and phases
-      appear in ``PHASE_ORDER``;
+      a reason — exactly one complete, as the request's final event;
+    * exactly one enqueue per request, as the request's first event (a
+      retry re-admits, it never re-enqueues);
+    * ``req:retry`` markers split the span into attempts; within each
+      attempt present phases appear in ``PHASE_ORDER``, and timestamps are
+      monotone non-decreasing across the whole request stream;
     * step events are contiguous (0..n-1) and, when ``engine_steps`` is
       given, count exactly ``engine_steps``;
     * slot occupancy never exceeds ``slots`` (when given) and the
-      occupancy recorded on each step event matches the number of
-      distinct admitted-but-not-completed requests at that step.
+      occupancy recorded on each step event matches the reconstructed
+      in-flight count — a request occupies a slot over each
+      [admit_step, release_step] interval, where release is the step of
+      the attempt's ``req:retry`` or the final ``req:complete``.
     """
     out: List[str] = []
     per_req: Dict[int, List[SpanEvent]] = {}
@@ -226,14 +250,19 @@ def validate(events: Sequence[SpanEvent], slots: int = 0,
     for ev in events:
         if ev.kind == STEP:
             step_events.append(ev)
-        elif ev.kind in PHASE_ORDER:
+        elif ev.kind in PHASE_ORDER or ev.kind == REQ_RETRY:
             per_req.setdefault(ev.rid, []).append(ev)
-        else:
+        elif ev.kind != HEALTH:
             out.append(f"unknown event kind {ev.kind!r}")
     for rid, evs in sorted(per_req.items()):
         kinds = [e.kind for e in evs]
-        if REQ_ENQUEUE not in kinds:
+        n_enq = kinds.count(REQ_ENQUEUE)
+        if n_enq == 0:
             out.append(f"req{rid}: no enqueue event")
+        elif n_enq > 1:
+            out.append(f"req{rid}: {n_enq} enqueue events (want exactly 1)")
+        elif kinds[0] != REQ_ENQUEUE:
+            out.append(f"req{rid}: enqueue is not the first event")
         if kinds.count(REQ_COMPLETE) != 1:
             out.append(f"req{rid}: {kinds.count(REQ_COMPLETE)} complete "
                        f"events (want exactly 1)")
@@ -243,9 +272,24 @@ def validate(events: Sequence[SpanEvent], slots: int = 0,
                     not comp.detail.startswith(TRUNCATED_PREFIX):
                 out.append(f"req{rid}: complete reason {comp.detail!r} is "
                            f"neither finished nor truncated:*")
-        order = [PHASE_ORDER[k] for k in kinds]
-        if order != sorted(order):
-            out.append(f"req{rid}: phases out of order: {kinds}")
+            if kinds[-1] != REQ_COMPLETE:
+                out.append(f"req{rid}: events after complete: "
+                           f"{kinds[kinds.index(REQ_COMPLETE) + 1:]}")
+        # split the span into attempts at retry markers; each attempt's
+        # phases must independently respect PHASE_ORDER
+        attempts: List[List[SpanEvent]] = [[]]
+        for e in evs:
+            attempts[-1].append(e)
+            if e.kind == REQ_RETRY:
+                attempts.append([])
+        if not attempts[-1]:
+            attempts.pop()
+        for i, att in enumerate(attempts):
+            order = [PHASE_ORDER[e.kind] for e in att
+                     if e.kind in PHASE_ORDER]
+            if order != sorted(order):
+                out.append(f"req{rid} attempt {i + 1}: phases out of "
+                           f"order: {[e.kind for e in att]}")
         ts = [e.ts_us for e in evs]
         if ts != sorted(ts):
             out.append(f"req{rid}: phase timestamps not monotone: {ts}")
@@ -255,22 +299,25 @@ def validate(events: Sequence[SpanEvent], slots: int = 0,
     if engine_steps >= 0 and len(step_events) != engine_steps:
         out.append(f"{len(step_events)} step events but engine ran "
                    f"{engine_steps} steps")
-    # reconstruct occupancy from the request lifecycle and check each step
-    admit_step = {rid: next((e.step for e in evs if e.kind == REQ_ADMIT), -1)
-                  for rid, evs in per_req.items()}
-    complete_step = {rid: next((e.step for e in evs
-                                if e.kind == REQ_COMPLETE), -1)
-                     for rid, evs in per_req.items()}
+    # reconstruct occupancy from the request lifecycle and check each step:
+    # each admit opens a slot interval, closed (inclusive) by the step of
+    # the attempt's retry marker or the final complete
+    intervals: List[Tuple[int, int]] = []
+    for rid, evs in per_req.items():
+        opened = -1
+        for e in evs:
+            if e.kind == REQ_ADMIT:
+                opened = e.step
+            elif e.kind in (REQ_RETRY, REQ_COMPLETE) and opened >= 0:
+                intervals.append((opened, e.step))
+                opened = -1
+        if opened >= 0:                     # admitted, never released
+            intervals.append((opened, 1 << 62))
     for ev in step_events:
         occ = ev.data[0] if ev.data else 0
         if slots and occ > slots:
             out.append(f"step {ev.step}: occupancy {occ} > {slots} slots")
-        # a request occupies its slot from the step it was admitted for
-        # through the step on which it completes, inclusive
-        expect = sum(1 for rid in per_req
-                     if admit_step[rid] >= 0 and admit_step[rid] <= ev.step
-                     and (complete_step[rid] < 0
-                          or complete_step[rid] >= ev.step))
+        expect = sum(1 for lo, hi in intervals if lo <= ev.step <= hi)
         if ev.data and occ != expect:
             out.append(f"step {ev.step}: occupancy {occ} but "
                        f"{expect} requests in flight")

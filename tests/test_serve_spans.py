@@ -121,6 +121,35 @@ def test_truncation_reason_and_counter():
                for s in summaries.values())
 
 
+def test_per_reason_truncation_counters():
+    # the aggregate truncation counter decomposes exactly into the
+    # per-reason companions; max_len truncations land on their own counter
+    eng, reg, tr = _run(requests=4, mean=0.0, prompt_lens=(4,),
+                        gen_lens=(32,), max_len=12)
+    total = int(reg.get("serve_requests_truncated_total").value)
+    assert total > 0
+    by_reason = {reason: int(reg.get(
+        f"serve_requests_truncated_{reason}_total").value)
+        for reason in ("max_len", "deadline", "shed", "fault",
+                       "quarantine_retry_exhausted")}
+    assert by_reason["max_len"] == total
+    assert sum(by_reason.values()) == total
+
+
+def test_ttft_sentinel_never_reaches_histogram():
+    # requests truncated before emitting any token must not contribute a
+    # TTFT sample (the first_token_us = -1 sentinel regression): max_len=6
+    # kills the second wave mid-prefill with zero generated tokens
+    eng, reg, tr = _run(requests=4, mean=0.0, prompt_lens=(4,),
+                        gen_lens=(32,), max_len=6)
+    tokenless = [r for r in eng.done if not r.out]
+    assert tokenless, "expected requests truncated before their first token"
+    ttft = reg.get("serve_ttft_us")
+    assert ttft.count == sum(bool(r.out) for r in eng.done)
+    assert ttft.quantile(0.0) >= 0
+    assert SP.validate(tr.events, slots=2, engine_steps=eng.steps) == []
+
+
 def test_same_seed_runs_serialize_identically():
     _, _, tr_a = _run(requests=4)
     _, _, tr_b = _run(requests=4)
